@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: datasets, timing, claim checks."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data import synthetic
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str, quick: bool = False):
+    """(X_train, X_val) stand-ins for the paper's two datasets."""
+    if name == "infmnist":
+        n = 20_000 if quick else 60_000
+        X = synthetic.infmnist_like(n + n // 10, seed=0)
+    elif name == "rcv1":
+        n = 20_000 if quick else 60_000
+        dim = 1024 if quick else 2048
+        X = synthetic.rcv1_like(n + n // 10, dim=dim, seed=0)
+    else:
+        raise KeyError(name)
+    return X[:n], X[n:]
+
+
+def mse_at_times(telemetry: List[Dict], grid: List[float]) -> List[float]:
+    """Validation MSE at each wall-time point (step function)."""
+    pts = [(t["t"], t["val_mse"]) for t in telemetry
+           if t.get("val_mse") is not None]
+    out = []
+    for g in grid:
+        best = None
+        for t, v in pts:
+            if t <= g:
+                best = v
+        out.append(best if best is not None else float("nan"))
+    return out
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def check(name: str, ok: bool, detail: str = "") -> bool:
+    print(f"  claim[{name}]: {'PASS' if ok else 'FAIL'} {detail}")
+    return ok

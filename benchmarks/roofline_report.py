@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for f in sorted(ART.glob("*.json")):
+        try:
+            cells.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def table(mesh_tag: str) -> str:
+    rows = []
+    hdr = ("| cell | ok | compute_s | memory_s | collective_s | bottleneck"
+           " | useful | roof-frac | peak mem |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for c in load_cells():
+        if mesh_tag not in c["cell"]:
+            continue
+        name = f"{c['arch']}×{c['shape']}"
+        if not c.get("ok"):
+            rows.append(f"| {name} | FAIL | - | - | - | - | - | - | - |")
+            continue
+        r = c["roofline"]
+        peak = (c.get("memory") or {}).get("peak_bytes")
+        uf = r.get("useful_ratio")
+        rf = r.get("roofline_fraction")
+        rows.append(
+            f"| {name} | ok | {r['compute_s']:.3g} | {r['memory_s']:.3g} |"
+            f" {r['collective_s']:.3g} | {r['bottleneck']} |"
+            f" {uf:.2f} |" if uf is not None else
+            f"| {name} | ok | {r['compute_s']:.3g} | {r['memory_s']:.3g} |"
+            f" {r['collective_s']:.3g} | {r['bottleneck']} | - |")
+        if uf is not None:
+            rows[-1] += (f" {rf:.4f} | {fmt_bytes(peak)} |"
+                         if rf is not None else f" - | {fmt_bytes(peak)} |")
+        else:
+            rows[-1] += f" - | {fmt_bytes(peak)} |"
+    return "\n".join(rows)
+
+
+def summary() -> str:
+    cells = load_cells()
+    n_ok = sum(1 for c in cells if c.get("ok"))
+    worst = [c for c in cells if c.get("ok")
+             and c["roofline"].get("roofline_fraction") is not None]
+    worst.sort(key=lambda c: c["roofline"]["roofline_fraction"])
+    lines = [f"cells: {n_ok}/{len(cells)} ok"]
+    if worst:
+        lines.append("worst roofline fractions:")
+        for c in worst[:5]:
+            lines.append(f"  {c['cell']}: "
+                         f"{c['roofline']['roofline_fraction']:.5f} "
+                         f"({c['roofline']['bottleneck']}-bound)")
+        coll = [c for c in worst
+                if c["roofline"]["bottleneck"] == "collective"]
+        lines.append(f"collective-bound cells: {len(coll)}")
+    return "\n".join(lines)
+
+
+def main(quick: bool = True):
+    print("== Dry-run / roofline summary ==")
+    print(summary())
+    out = Path(__file__).resolve().parent.parent / "artifacts" / \
+        "roofline_tables.md"
+    out.write_text("## single-pod 16x16\n\n" + table("pod16x16")
+                   + "\n\n## multi-pod 2x16x16\n\n" + table("pod2x16x16")
+                   + "\n")
+    print(f"tables -> {out}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark entry point: ``python -m benchmarks.run [--full]``.
+
+One module per paper table/figure + the pruning study + the dry-run
+roofline summary. Exit code 0 iff every qualitative claim check passes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets / longer budgets")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,table1,table2,pruning,"
+                         "roofline")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig1_mse_vs_time, fig2_rho_effect,
+                            pruning_effectiveness, roofline_report,
+                            table1_throughput, table2_final_quality)
+    suites = {
+        "table1": table1_throughput.main,
+        "fig1": fig1_mse_vs_time.main,
+        "fig2": fig2_rho_effect.main,
+        "table2": table2_final_quality.main,
+        "pruning": pruning_effectiveness.main,
+        "roofline": roofline_report.main,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    ok = True
+    for name in chosen:
+        t0 = time.time()
+        res = suites[name](quick=quick)
+        ok &= bool(res)
+        print(f"[{name}] {'ok' if res else 'CLAIM-CHECK-FAILED'} "
+              f"({time.time() - t0:.0f}s)\n")
+    print(f"benchmarks: {'ALL CLAIMS PASS' if ok else 'SOME CLAIMS FAILED'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Table 1: mb implementation throughput — seconds to process N points.
+
+The paper compares implementations (ours/sklearn/sofia) on absolute
+wall-time; offline we report our own jit'd throughput (points/s and
+effective GFLOP/s of the assignment step) on both dataset stand-ins,
+plus the Pallas kernel's interpret-mode validation cost for reference.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import driver
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+
+def main(quick: bool = True):
+    print("== Table 1: mb throughput (one full pass, k=50) ==")
+    out = {}
+    for ds in ("infmnist", "rcv1"):
+        X, _ = common.dataset(ds, quick)
+        n, d = X.shape
+        k, b = 50, 5000
+        res = driver.fit(X, k, algorithm="mb", b0=b,
+                         max_rounds=n // b, eval_every=10 ** 9, seed=0)
+        t = res.telemetry[-1]["t"]
+        flops = 2.0 * n * d * k
+        out[ds] = {"n": n, "d": d, "seconds_per_pass": t,
+                   "points_per_s": n / t, "gflops": flops / t / 1e9}
+        print(f"  {ds:9s} N={n} d={d}: {t:.2f}s/pass "
+              f"({n / t:,.0f} pts/s, {flops / t / 1e9:.1f} GFLOP/s)")
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "table1.json").write_text(json.dumps(out, indent=1))
+    return True
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main(quick=True) else 1)

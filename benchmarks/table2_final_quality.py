@@ -1,0 +1,55 @@
+"""Table 2: final cluster quality — lloyd vs tb-inf across b0.
+
+Paper's finding: equal quality on the dense set for all b0; on the
+sparse set tb-inf degrades for SMALL b0 (we check the same direction).
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import driver
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+B0S = [100, 1000, 5000]
+
+
+def main(quick: bool = True):
+    print("== Table 2: final quality, lloyd vs tb-inf over b0 ==")
+    seeds = (0,) if quick else (0, 1, 2)
+    out = {}
+    for ds in ("infmnist", "rcv1"):
+        X, Xv = common.dataset(ds, quick)
+        k = 50
+        rounds = 60 if quick else 200
+        lloyd_mse = float(np.mean([
+            driver.fit(X, k, algorithm="lloyd", X_val=Xv,
+                       max_rounds=rounds, eval_every=10 ** 9,
+                       seed=s).final_mse for s in seeds]))
+        row = {"lloyd": lloyd_mse}
+        for b0 in B0S:
+            row[f"tb_b0_{b0}"] = float(np.mean([
+                driver.fit(X, k, algorithm="tb", b0=b0, rho=math.inf,
+                           X_val=Xv, max_rounds=30 * rounds,
+                           eval_every=10 ** 9, seed=s).final_mse
+                for s in seeds]))
+        out[ds] = row
+        print(f"  {ds:9s} lloyd {lloyd_mse:.5f}  " + "  ".join(
+            f"tb(b0={b0}) {row[f'tb_b0_{b0}']:.5f}" for b0 in B0S))
+    ok = common.check(
+        "dense: tb-inf(b0=5000) ~ lloyd",
+        out["infmnist"]["tb_b0_5000"] <= out["infmnist"]["lloyd"] * 1.05)
+    ok &= common.check(
+        "sparse: small b0 no better than large b0",
+        out["rcv1"]["tb_b0_100"] >= out["rcv1"]["tb_b0_5000"] * 0.98)
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "table2.json").write_text(json.dumps(out, indent=1))
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main(quick=True) else 1)

@@ -1,0 +1,39 @@
+"""Cluster an LM's token-embedding table with tb-inf (VQ / semantic dedup).
+
+The classic application of web-scale k-means inside an LM stack: build a
+k-codebook over the (vocab, d_model) embedding table — usable for
+embedding compression, semantic dedup, or routing analysis. Uses the
+reduced tinyllama config (full configs are dry-run-only on this box).
+
+    PYTHONPATH=src python examples/cluster_embeddings.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import fit
+from repro.core.state import full_mse
+from repro.models import model as M
+
+cfg = configs.get_reduced("tinyllama-1.1b")
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+E = np.asarray(params["embed"], np.float32)          # (vocab, d)
+print(f"embedding table: {E.shape}")
+
+K = 32
+res = fit(E, K, algorithm="tb", rho=float("inf"), b0=128,
+          bounds="hamerly2", max_rounds=200, seed=0)
+print(f"tb-inf codebook: converged={res.converged} "
+      f"rounds={len(res.telemetry)}")
+
+mse = float(full_mse(jnp.asarray(E), jnp.asarray(res.C)))
+print(f"VQ reconstruction MSE: {mse:.6f}")
+
+# codebook utilisation
+a = np.asarray(res.state.points.a)
+sizes = np.bincount(a[a >= 0], minlength=K)
+print(f"codebook usage: min={sizes.min()} max={sizes.max()} "
+      f"empty={int((sizes == 0).sum())}")
+compression = E.shape[0] * E.shape[1] / (K * E.shape[1] + E.shape[0])
+print(f"compression ratio vs raw table: {compression:.1f}x")

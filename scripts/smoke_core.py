@@ -1,0 +1,31 @@
+"""Quick dev smoke of the core engine (not a test)."""
+import numpy as np
+
+from repro.core import fit
+from repro.core.state import full_mse
+import jax.numpy as jnp
+
+rng = np.random.default_rng(0)
+k, d, n = 8, 16, 4000
+centers = rng.normal(size=(k, d)) * 5
+X = (centers[rng.integers(0, k, n)] + rng.normal(size=(n, d))).astype(np.float32)
+Xv = (centers[rng.integers(0, k, 500)] + rng.normal(size=(500, d))).astype(np.float32)
+
+for algo, kw in [
+    ("lloyd", {}),
+    ("mb", dict(b0=256)),
+    ("mbf", dict(b0=256)),
+    ("gb", dict(b0=256, rho=float("inf"))),
+    ("tb", dict(b0=256, rho=float("inf"), bounds="hamerly2")),
+    ("tb", dict(b0=256, rho=float("inf"), bounds="elkan")),
+    ("tb", dict(b0=256, rho=100.0, bounds="hamerly2")),
+]:
+    res = fit(X, k, algorithm=algo, X_val=Xv, max_rounds=60, eval_every=5,
+              seed=1, **kw)
+    tail = [r for r in res.telemetry if r["val_mse"] is not None][-1]
+    print(f"{algo:6s} {str(kw.get('bounds','')):9s} rho={kw.get('rho','-')}"
+          f" rounds={len(res.telemetry):3d} conv={res.converged}"
+          f" val_mse={tail['val_mse']:.4f}"
+          f" recomputed_last={res.telemetry[-2]['n_recomputed']}")
+print("inertia sanity (true centers):",
+      float(full_mse(jnp.asarray(Xv), jnp.asarray(centers, jnp.float32))))

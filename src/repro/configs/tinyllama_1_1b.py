@@ -1,0 +1,22 @@
+"""TinyLlama 1.1B — llama2-architecture small dense model.
+
+[arXiv:2401.02385] 22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000.
+"""
+from repro.configs.base import ModelConfig, replace
+
+CONFIG = ModelConfig(
+    arch_id="tinyllama-1.1b",
+    family="dense",
+    n_layers=22,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=5632,
+    vocab=32000,
+)
+
+
+def reduced() -> ModelConfig:
+    return replace(CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                   head_dim=16, d_ff=128, vocab=512)

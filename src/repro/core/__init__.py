@@ -1,0 +1,20 @@
+"""Nested Mini-Batch K-Means — the paper's contribution as a JAX module.
+
+Public API:
+    fit(X, k, algorithm=..., rho=..., ...)      host driver (single host)
+    fit_distributed(...)                        shard_map multi-device
+    nested_round / mb_round / lloyd_round       pure per-round functions
+    init_state / KMeansState / full_mse         state utilities
+"""
+from repro.core.controller import should_grow, sigma_c
+from repro.core.driver import ALGORITHMS, FitResult, fit
+from repro.core.rounds import lloyd_round, mb_round, mbf_round, nested_round
+from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
+                              PointState, RoundInfo, full_mse, init_state)
+
+__all__ = [
+    "fit", "FitResult", "ALGORITHMS",
+    "nested_round", "mb_round", "mbf_round", "lloyd_round",
+    "init_state", "full_mse", "should_grow", "sigma_c",
+    "KMeansState", "ClusterStats", "PointState", "ElkanBounds", "RoundInfo",
+]

@@ -1,0 +1,51 @@
+"""The paper's dynamic batch-growth controller (Algorithm 6).
+
+``sigma_C(j) = sqrt(sse(j) / (v(j) (v(j)-1)))`` estimates the stochastic
+error of centroid j's position; ``p(j)`` is the progress it made last
+round. The batch doubles when the median ratio sigma_C/p reaches rho:
+noise dominates progress -> more data is needed (anti-overfitting); while
+progress dominates noise the current batch is still informative
+(anti-redundancy).
+
+Degenerate cases, following the paper:
+  * ``p(j) == 0``        -> ratio +inf (cluster j finished moving).
+  * ``v(j) <= 1``        -> ratio +inf (no variance estimate possible; the
+                             cluster obviously needs more data).
+  * ``rho == inf``       -> doubles iff the median ratio is +inf, i.e. MORE
+                             THAN HALF the centroids did not move (gb-inf /
+                             tb-inf; see DESIGN.md on the Alg. 10/11 typo).
+
+"median" is the lower median ``sorted[(k-1)//2]`` so that with k even and
+exactly half the ratios infinite the batch does NOT double ("more than
+half" is strict in the paper's prose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigma_c(sse: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Per-cluster stochastic-error estimate; +inf where v <= 1."""
+    denom = v * (v - 1.0)
+    return jnp.where(v > 1.0, jnp.sqrt(sse / jnp.maximum(denom, 1.0)),
+                     jnp.inf)
+
+
+def growth_ratios(sse: jnp.ndarray, v: jnp.ndarray,
+                  p: jnp.ndarray) -> jnp.ndarray:
+    sig = sigma_c(sse, v)
+    return jnp.where(p > 0.0, sig / jnp.maximum(p, 1e-30), jnp.inf)
+
+
+def lower_median(x: jnp.ndarray) -> jnp.ndarray:
+    k = x.shape[0]
+    return jnp.sort(x)[(k - 1) // 2]
+
+
+def should_grow(sse: jnp.ndarray, v: jnp.ndarray, p: jnp.ndarray,
+                rho: float):
+    """(grow: bool scalar, r: median ratio). rho may be float('inf')."""
+    r = lower_median(growth_ratios(sse, v, p))
+    # r >= inf is True only when r == inf -> the rho=inf degenerate case
+    # (doubling iff >half the centroids are unchanged) falls out for free.
+    return r >= rho, r

@@ -1,0 +1,326 @@
+"""Distributed nested mini-batch k-means: shard_map over the device mesh.
+
+Layout (see DESIGN.md §3):
+  * points row-sharded over the data axes (("pod","data") on the
+    production mesh). Each shard holds a contiguous slice of the
+    PRE-SHUFFLED dataset, so the nested-prefix property holds per shard
+    and the global batch of size b is the union of per-shard prefixes of
+    size b / n_shards.
+  * cluster stats replicated — S/v/sse deltas are psum'ed inside the round
+    (rounds.nested_round(data_axes=...)), making the stats, centroids and
+    the growth decision bit-identical on every shard with no host
+    round-trip.
+  * for very large k (kmeans_xl: k=4096) the centroids are additionally
+    sharded over "model": each model shard scans its k-slice with the
+    fused top-2 kernel, the per-shard (d1, d2, idx) triples — 3 floats per
+    point, tiny — are all-gathered over "model" and folded, and the S
+    delta is psum_scatter'ed back to the k-shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import controller, rounds
+from repro.core.state import (ClusterStats, KMeansState, PointState,
+                              RoundInfo, centroid_update, init_state)
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------------------------
+# replicated-centroid engine (paper-scale k)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
+                       b_local: int, rho: float, bounds: str = "hamerly2",
+                       capacity: Optional[int] = None,
+                       use_shalf: bool = True):
+    """jit(shard_map(nested_round)) for one (b_local, capacity) bucket."""
+    row = P(data_axes)
+    pt_specs = PointState(a=row, d=row, lb=row)
+    st_specs = ClusterStats(C=P(), S=P(), v=P(), sse=P(), p=P())
+    state_specs = KMeansState(stats=st_specs, points=pt_specs,
+                              elkan=None, round=P())
+    info_specs = RoundInfo(**{f.name: P() for f in
+                              dataclasses.fields(RoundInfo)})
+
+    fn = functools.partial(
+        rounds.nested_round, b=b_local, rho=rho, bounds=bounds,
+        capacity=capacity, use_shalf=use_shalf, data_axes=data_axes)
+    shardmapped = jax.shard_map(
+        fn, mesh=mesh, in_specs=(P(data_axes, None), state_specs),
+        out_specs=(state_specs, info_specs), check_vma=False)
+    return jax.jit(shardmapped)
+
+
+def shard_state(state: KMeansState, mesh: Mesh,
+                data_axes: Tuple[str, ...]) -> KMeansState:
+    """Place a host state onto the mesh with the engine's layout."""
+    row = NamedSharding(mesh, P(data_axes))
+    rep = NamedSharding(mesh, P())
+    points = PointState(
+        a=jax.device_put(state.points.a, row),
+        d=jax.device_put(state.points.d, row),
+        lb=jax.device_put(state.points.lb, row))
+    stats = jax.tree.map(lambda x: jax.device_put(x, rep), state.stats)
+    return KMeansState(stats=stats, points=points, elkan=None,
+                       round=jax.device_put(state.round, rep))
+
+
+def fit_distributed(X,
+                    k: int,
+                    mesh: Mesh,
+                    *,
+                    data_axes: Tuple[str, ...] = ("data",),
+                    rho: float = float("inf"),
+                    b0: int = 5000,
+                    bounds: str = "hamerly2",
+                    max_rounds: int = 1000,
+                    seed: int = 0,
+                    use_shalf: bool = True,
+                    on_round=None):
+    """Multi-device nested mini-batch k-means (tb-rho / gb-rho).
+
+    Semantically identical to driver.fit(algorithm="tb") modulo the batch
+    composition: the global batch is the union of equal per-shard
+    prefixes of one global shuffle (vs a global prefix). Both are uniform
+    samples; tests check single-shard equivalence exactly.
+    """
+    n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    rng = np.random.default_rng(seed)
+    X = np.asarray(X)
+    N_real = X.shape[0]
+    pad = -N_real % n_shards
+    if pad:
+        # structural padding at the END of the shuffle: padded rows sit at
+        # the tail of every shard and b_local is capped below them, so
+        # they can never enter a nested prefix. At the b == N limit up to
+        # n_shards-1 trailing shuffle positions go unused (negligible).
+        X = np.concatenate([X, np.repeat(X[:1], pad, axis=0)])
+    N = X.shape[0]
+    perm = np.concatenate([rng.permutation(N_real),
+                           np.arange(N_real, N)])
+    # interleave so shard s gets global-shuffle positions s::n_shards ->
+    # the union of shard prefixes of size b/n_shards IS the global prefix
+    # of size b of the shuffle.
+    Xh = X[perm].reshape(N // n_shards, n_shards, -1).transpose(1, 0, 2)
+    Xd = jax.device_put(jnp.asarray(Xh.reshape(N, -1)),
+                        NamedSharding(mesh, P(data_axes, None)))
+    C0 = jnp.asarray(X[perm[:k]], jnp.float32)
+
+    state = init_state(Xd, k, bounds="hamerly2" if bounds == "hamerly2"
+                       else "none" if bounds == "none" else bounds)
+    state = dataclasses.replace(
+        state, stats=dataclasses.replace(state.stats, C=C0))
+    state = shard_state(state, mesh, data_axes)
+
+    b_local = max(1, min(b0, N_real) // n_shards)
+    n_local = N_real // n_shards     # padded tail rows stay inactive
+    capacity: Optional[int] = None
+    telemetry: List[Dict[str, Any]] = []
+    t_work = 0.0
+    converged = False
+
+    for _ in range(max_rounds):
+        t0 = time.perf_counter()
+        while True:
+            round_fn = make_sharded_round(
+                mesh, data_axes, b_local=b_local, rho=rho, bounds=bounds,
+                capacity=capacity, use_shalf=use_shalf)
+            new_state, info = round_fn(Xd, state)
+            if not bool(info.overflow):
+                break
+            capacity = (None if capacity is None
+                        or 2 * capacity >= b_local else 2 * capacity)
+        jax.block_until_ready(new_state.stats.C)
+        t_work += time.perf_counter() - t0
+        state = new_state
+        rec = dict(round=len(telemetry), t=t_work,
+                   b=int(info.n_active),
+                   batch_mse=float(info.batch_mse),
+                   n_changed=int(info.n_changed),
+                   n_recomputed=int(info.n_recomputed),
+                   grow=bool(info.grow), r_median=float(info.r_median))
+        telemetry.append(rec)
+        if on_round:
+            on_round(rec)
+
+        if bounds == "hamerly2":
+            need_local = -(-int(info.n_recomputed) // n_shards)
+            if bool(info.grow) and b_local < n_local:
+                capacity = None
+            else:
+                cap = max(256, 1 << (2 * max(need_local, 1) - 1)
+                          .bit_length())
+                capacity = None if cap >= b_local else cap
+        if bool(info.grow):
+            b_local = min(2 * b_local, n_local)
+        if (int(info.n_active) >= n_local * n_shards
+                and int(info.n_changed) == 0
+                and float(jnp.max(state.stats.p)) == 0.0):
+            converged = True
+            break
+
+    from repro.core.driver import FitResult
+    return FitResult(C=np.asarray(state.stats.C), state=state,
+                     telemetry=telemetry, converged=converged,
+                     algorithm=f"tb-dist[{bounds}]")
+
+
+# --------------------------------------------------------------------------
+# sharded-centroid assignment (k over "model") — the kmeans_xl path
+# --------------------------------------------------------------------------
+
+def _fold_top2(d1a, d2a, ia, d1b, d2b, ib):
+    """Combine two (min, 2nd-min, argmin) triples."""
+    new1 = jnp.minimum(d1a, d1b)
+    newi = jnp.where(d1b < d1a, ib, ia)
+    new2 = jnp.minimum(jnp.maximum(d1a, d1b), jnp.minimum(d2a, d2b))
+    return new1, new2, newi
+
+
+def assign_top2_sharded(x: jax.Array, C_local: jax.Array, *,
+                        model_axis: str, k_offset: jax.Array):
+    """Top-2 nearest over model-sharded centroids (inside shard_map).
+
+    Each model shard scans its (k_local, d) slice, then the per-shard
+    triples are all-gathered over ``model_axis`` (3 floats + 1 int per
+    point per shard) and folded. Returns GLOBAL indices.
+    """
+    a_loc, d1_loc, d2_loc = ops.assign_top2(x, C_local)
+    a_glob = a_loc + k_offset
+    d1s = jax.lax.all_gather(d1_loc, model_axis)       # (m, b)
+    d2s = jax.lax.all_gather(d2_loc, model_axis)
+    ias = jax.lax.all_gather(a_glob, model_axis)
+    d1, d2, ia = d1s[0], d2s[0], ias[0]
+    m = d1s.shape[0]
+    for s in range(1, m):
+        d1, d2, ia = _fold_top2(d1, d2, ia, d1s[s], d2s[s], ias[s])
+    return ia.astype(jnp.int32), d1, d2
+
+
+def xl_round_body(x, C_local, S_local, v_local, *, k: int,
+                  data_axes: Tuple[str, ...], model_axis: str):
+    """One production round with points sharded over data axes AND
+    centroids sharded over the model axis (the kmeans_xl dry-run step).
+
+    Stateless-bounds variant (first / dense round): exhaustive sharded
+    top-2, fresh S/v via one-hot-matmul cluster sums reduced with
+    psum(data) + psum_scatter(model). Returns the updated local centroid
+    shard and telemetry.
+    """
+    k_local = C_local.shape[0]
+    ax_idx = jax.lax.axis_index(model_axis)
+    k_offset = ax_idx * k_local
+
+    a, d1, d2 = assign_top2_sharded(x, C_local, model_axis=model_axis,
+                                    k_offset=k_offset)
+    d = jnp.sqrt(jnp.maximum(d1, 0.0))
+
+    # full-k local partials. x (and the folded a) are REPLICATED over the
+    # model axis, so each model shard's partial already agrees across the
+    # axis: slice out the local k-range for free, then psum only the
+    # (k_local, d) slice over the data axes — the data all-reduce volume
+    # drops by the model-axis size versus reducing full k everywhere.
+    S_full, v_full = ops.cluster_sum(x, a, k)
+    sse_full = jax.ops.segment_sum(d * d, a, num_segments=k)
+    S_new = jax.lax.dynamic_slice_in_dim(S_full, k_offset, k_local, 0)
+    v_new = jax.lax.dynamic_slice_in_dim(v_full, k_offset, k_local, 0)
+    sse_new = jax.lax.dynamic_slice_in_dim(sse_full, k_offset, k_local, 0)
+    S_new = jax.lax.psum(S_new, data_axes)
+    v_new = jax.lax.psum(v_new, data_axes)
+    sse_new = jax.lax.psum(sse_new, data_axes)
+
+    safe_v = jnp.maximum(v_new, 1.0)
+    C_new = jnp.where((v_new > 0.0)[:, None], S_new / safe_v[:, None],
+                      C_local)
+    p_local = jnp.sqrt(jnp.sum((C_new - C_local) ** 2, axis=1))
+    # growth controller needs global per-cluster stats (tiny vectors)
+    p_all = jax.lax.all_gather(p_local, model_axis, tiled=True)
+    v_all = jax.lax.all_gather(v_new, model_axis, tiled=True)
+    sse_all = jax.lax.all_gather(sse_new, model_axis, tiled=True)
+    grow, r_med = controller.should_grow(sse_all, v_all, p_all,
+                                         rho=float("inf"))
+    mse = jax.lax.psum(jnp.sum(d * d), data_axes) / \
+        jax.lax.psum(jnp.asarray(x.shape[0], jnp.float32), data_axes)
+    return C_new, S_new, v_new, a, d, d2, grow, r_med, mse
+
+
+def dp_round_body(x, C, *, data_axes: Tuple[str, ...],
+                  use_pallas: bool = False):
+    """Optimized production round: pure data parallelism, C replicated.
+
+    For k up to ~10^4 the centroid block is VMEM-resident (k=4096 x
+    d=1024 bf16 = 8 MiB), so sharding points over EVERY mesh axis and
+    replicating C beats centroid sharding: assignment intensity is 2k
+    FLOPs per 4 bytes of x — firmly compute-bound — and the only
+    collective is the (k, d) psum of S/v/sse. On TPU the whole round is
+    the fused single-X-pass Pallas kernel (kernels/fused_round.py).
+    """
+    if use_pallas:
+        from repro.kernels.fused_round import fused_round_pallas
+        a, d1, d2, S_loc, v_loc, sse_loc = fused_round_pallas(
+            x, C, interpret=jax.default_backend() != "tpu")
+    else:
+        a, d1sq, _ = ops.assign_top2(x, C)
+        d1 = d1sq
+        S_loc, v_loc = ops.cluster_sum(x, a, C.shape[0])
+        sse_loc = jax.ops.segment_sum(d1, a, num_segments=C.shape[0])
+    d = jnp.sqrt(jnp.maximum(d1, 0.0))
+    S = jax.lax.psum(S_loc, data_axes)
+    v = jax.lax.psum(v_loc, data_axes)
+    sse = jax.lax.psum(sse_loc, data_axes)
+    safe_v = jnp.maximum(v, 1.0)
+    C_new = jnp.where((v > 0.0)[:, None], S / safe_v[:, None], C)
+    p = jnp.sqrt(jnp.sum((C_new - C) ** 2, axis=1))
+    grow, r_med = controller.should_grow(sse, v, p, rho=float("inf"))
+    mse = jax.lax.psum(jnp.sum(d * d), data_axes) / jax.lax.psum(
+        jnp.asarray(x.shape[0], jnp.float32), data_axes)
+    return C_new, S, v, a, d, grow, r_med, mse
+
+
+@functools.lru_cache(maxsize=None)
+def make_dp_round(mesh: Mesh, *, use_pallas: bool = False):
+    """jit(shard_map) data-parallel round over ALL mesh axes."""
+    axes = tuple(mesh.axis_names)
+    fn = functools.partial(dp_round_body, data_axes=axes,
+                           use_pallas=use_pallas)
+    sm = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None), P(None),
+                   P(axes), P(axes), P(), P(), P()),
+        check_vma=False)
+    return jax.jit(sm)
+
+
+@functools.lru_cache(maxsize=None)
+def make_xl_round(mesh: Mesh, *, k: int,
+                  data_axes: Tuple[str, ...] = ("data",),
+                  model_axis: str = "model"):
+    """jit(shard_map) of the sharded-centroid production round.
+
+    Kept as the centroid-sharded variant for k too large to replicate
+    (k*d beyond VMEM, ~10^5+ centroids); for kmeans_xl (k=4096) the
+    data-parallel ``make_dp_round`` dominates it — see §Perf."""
+    row = P(data_axes)
+    kshard = P(model_axis)
+
+    fn = functools.partial(xl_round_body, k=k, data_axes=data_axes,
+                           model_axis=model_axis)
+    sm = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(data_axes, None), P(model_axis, None),
+                  P(model_axis, None), kshard),
+        out_specs=(P(model_axis, None), P(model_axis, None), kshard,
+                   row, row, row, P(), P(), P()),
+        check_vma=False)
+    return jax.jit(sm)

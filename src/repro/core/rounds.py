@@ -1,0 +1,341 @@
+"""One-round update functions for every algorithm in the paper.
+
+Each function is pure (state in -> state out) and jit-friendly with the
+batch size ``b`` (and recompute ``capacity``) STATIC — the host driver
+compiles one executable per power-of-two bucket (see driver.py). All are
+exact: bound tests only ever *skip provably-unnecessary* work, so every
+algorithm produces identical assignments to its exhaustive counterpart.
+
+Algorithms (paper naming):
+  * ``lloyd_round``         Lloyd's algorithm (full batch, fresh means).
+  * ``mb_round``            Sculley's Mini-Batch (App. A.1 S/v form).
+  * ``mbf_round``           mb-f: Mini-Batch with contamination removal.
+  * ``nested_round``        gb-rho / tb-rho family on the nested prefix:
+      bounds="none"       -> gb (exhaustive assignment each round)
+      bounds="hamerly2"   -> tb, TPU-native two-bound + capacity compaction
+      bounds="elkan"      -> tb, paper-faithful per-(i,j) lower bounds
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import controller
+from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
+                              PointState, RoundInfo, centroid_update)
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _euclid(d2: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def _dist_to_assigned(x: jax.Array, C: jax.Array, a: jax.Array) -> jax.Array:
+    """Exact euclidean distance of each point to its assigned centroid."""
+    Cg = C[jnp.clip(a, 0, C.shape[0] - 1)]
+    return _euclid(jnp.sum((x.astype(jnp.float32) - Cg) ** 2, axis=1))
+
+
+def _half_intercentroid(C: jax.Array) -> jax.Array:
+    """Hamerly's s(j): half the distance to the nearest other centroid."""
+    d2 = ref.pairwise_dist2(C, C)
+    k = C.shape[0]
+    d2 = d2.at[jnp.arange(k), jnp.arange(k)].set(jnp.inf)
+    return 0.5 * _euclid(jnp.min(d2, axis=1))
+
+
+def _segment_scalar(vals: jax.Array, ids: jax.Array, k: int,
+                    weights: jax.Array | None = None) -> jax.Array:
+    if weights is not None:
+        vals = vals * weights
+    return jax.ops.segment_sum(vals, jnp.clip(ids, 0, k - 1), num_segments=k)
+
+
+def _delta_sv(x: jax.Array, a_prev: jax.Array, a_new: jax.Array, k: int,
+              kernel_backend: Optional[str]):
+    """The mb-f / nested S,v delta: remove expired, add current. Returns
+    (dS, dv) so callers can psum the delta across data shards before
+    applying it to the replicated stats."""
+    seen = a_prev >= 0
+    changed = seen & (a_new != a_prev)
+    w_rm = jnp.where(changed, 1.0, 0.0).astype(jnp.float32)
+    w_add = jnp.where(changed | ~seen, 1.0, 0.0).astype(jnp.float32)
+    S_rm, v_rm = ops.cluster_sum(x, jnp.clip(a_prev, 0, k - 1), k,
+                                 weights=w_rm, backend=kernel_backend)
+    S_add, v_add = ops.cluster_sum(x, a_new, k, weights=w_add,
+                                   backend=kernel_backend)
+    return S_add - S_rm, v_add - v_rm
+
+
+def _refresh_sse(d_act: jax.Array, a_act: jax.Array, k: int) -> jax.Array:
+    """sse(j) = sum of d(i)^2 over active members (exact, no staleness)."""
+    return _segment_scalar(d_act * d_act, a_act, k)
+
+
+# --------------------------------------------------------------------------
+# Lloyd
+# --------------------------------------------------------------------------
+
+def lloyd_round(X: jax.Array, state: KMeansState, *,
+                kernel_backend: Optional[str] = None
+                ) -> Tuple[KMeansState, RoundInfo]:
+    """Exact Lloyd iteration: full reassignment + fresh means."""
+    k = state.stats.C.shape[0]
+    n = X.shape[0]
+    a_new, d1sq, _ = ops.assign_top2(X, state.stats.C,
+                                     backend=kernel_backend)
+    d = _euclid(d1sq)
+    S, v = ops.cluster_sum(X, a_new, k, backend=kernel_backend)
+    sse = _refresh_sse(d, a_new, k)
+    stats = centroid_update(dataclasses.replace(
+        state.stats, S=S, v=v, sse=sse))
+    n_changed = jnp.sum((a_new != state.points.a).astype(jnp.int32))
+    points = dataclasses.replace(state.points, a=a_new, d=d)
+    info = RoundInfo(
+        batch_mse=jnp.mean(d * d), n_changed=n_changed,
+        n_recomputed=jnp.asarray(n, jnp.int32),
+        n_active=jnp.asarray(n, jnp.int32),
+        overflow=jnp.asarray(False), grow=jnp.asarray(False),
+        r_median=jnp.asarray(jnp.inf, jnp.float32))
+    new_state = dataclasses.replace(state, stats=stats, points=points,
+                                    round=state.round + 1)
+    return new_state, info
+
+
+# --------------------------------------------------------------------------
+# Mini-Batch (Sculley) and mb-f
+# --------------------------------------------------------------------------
+
+def mb_round(X: jax.Array, idx: jax.Array, state: KMeansState, *,
+             fixed: bool, kernel_backend: Optional[str] = None
+             ) -> Tuple[KMeansState, RoundInfo]:
+    """One round of mb (Alg. 8 S/v form) or mb-f (Alg. 4, fixed=True).
+
+    ``idx``: (b,) indices of this round's batch (driver cycles through a
+    reshuffled permutation, per the paper's footnote 1 — no within-batch
+    duplicates).
+    """
+    k = state.stats.C.shape[0]
+    b = idx.shape[0]
+    x = X[idx]
+    a_new, d1sq, _ = ops.assign_top2(x, state.stats.C,
+                                     backend=kernel_backend)
+    d = _euclid(d1sq)
+
+    if fixed:
+        a_prev = state.points.a[idx]
+        dS, dv = _delta_sv(x, a_prev, a_new, k, kernel_backend)
+        stats = dataclasses.replace(state.stats, S=state.stats.S + dS,
+                                    v=state.stats.v + dv)
+        n_changed = jnp.sum(((a_prev >= 0) & (a_new != a_prev))
+                            .astype(jnp.int32))
+    else:
+        # plain mb never removes: every (re)assignment accumulates forever
+        S_add, v_add = ops.cluster_sum(x, a_new, k, backend=kernel_backend)
+        stats = dataclasses.replace(state.stats, S=state.stats.S + S_add,
+                                    v=state.stats.v + v_add)
+        n_changed = jnp.asarray(b, jnp.int32)
+
+    stats = centroid_update(stats)
+    points = dataclasses.replace(
+        state.points,
+        a=state.points.a.at[idx].set(a_new),
+        d=state.points.d.at[idx].set(d))
+    info = RoundInfo(
+        batch_mse=jnp.mean(d * d), n_changed=n_changed,
+        n_recomputed=jnp.asarray(b, jnp.int32),
+        n_active=jnp.asarray(b, jnp.int32),
+        overflow=jnp.asarray(False), grow=jnp.asarray(False),
+        r_median=jnp.asarray(jnp.inf, jnp.float32))
+    new_state = dataclasses.replace(state, stats=stats, points=points,
+                                    round=state.round + 1)
+    return new_state, info
+
+
+def mbf_round(X, idx, state, *, kernel_backend=None):
+    return mb_round(X, idx, state, fixed=True, kernel_backend=kernel_backend)
+
+
+# --------------------------------------------------------------------------
+# Nested (grow-batch) rounds: gb-rho / tb-rho
+# --------------------------------------------------------------------------
+
+def _assign_exhaustive(x, state, a_prev):
+    """bounds='none': full top-2 for every active point."""
+    a_new, d1sq, d2sq = ops.assign_top2(x, state.stats.C)
+    return (a_new, _euclid(d1sq), _euclid(d2sq),
+            jnp.asarray(x.shape[0], jnp.int32), jnp.asarray(False),
+            None)
+
+
+def _assign_hamerly2(x, state, a_prev, *, capacity: Optional[int],
+                     use_shalf: bool, kernel_backend):
+    """TPU-native bounding: exact-refresh upper + decayed 2nd-nearest lower.
+
+    Per round (active slice, all vectorised):
+      1. lb' = lb - max_j p(j)                       (bound decay, eq. 4)
+      2. d_a = ||x - C(a)|| exact for every point    (O(b d), negligible)
+      3. settled iff d_a <= max(lb', s_half(a))      (Hamerly tests)
+      4. the unsettled are COMPACTED into a ``capacity``-sized buffer and
+         only that buffer hits the fused top-2 kernel — tile-level work
+         elimination (the TPU adaptation of Elkan's per-scalar skip).
+    Settled points keep their assignment with an EXACT distance (step 2),
+    so sse / sigma_C stay exact. If more than ``capacity`` points need
+    recompute the round reports overflow=True and the driver retries the
+    same input state with a larger bucket — exactness is never sacrificed.
+    ``capacity=None`` recomputes everything (used for b == capacity).
+    """
+    C = state.stats.C
+    b = x.shape[0]
+    seen = a_prev >= 0
+    p_max = jnp.max(state.stats.p)
+    lb_dec = state.points.lb[:b] - p_max
+    d_a = _dist_to_assigned(x, C, a_prev)
+    thresh = lb_dec
+    if use_shalf:
+        s_half = _half_intercentroid(C)
+        thresh = jnp.maximum(lb_dec, s_half[jnp.clip(a_prev, 0, None)])
+    settled = seen & (d_a <= thresh)
+    needs = ~settled
+    n_need = jnp.sum(needs.astype(jnp.int32))
+
+    if capacity is None or capacity >= b:
+        a_full, d1sq, d2sq = ops.assign_top2(x, C, backend=kernel_backend)
+        d1, d2 = _euclid(d1sq), _euclid(d2sq)
+        a_new = jnp.where(settled, a_prev, a_full)
+        d_new = jnp.where(settled, d_a, d1)
+        lb_new = jnp.where(settled, lb_dec, d2)
+        return a_new, d_new, lb_new, n_need, jnp.asarray(False), None
+
+    # compact-and-batch: unsettled points first (stable sort keeps order)
+    order = jnp.argsort(jnp.where(needs, 0, 1), stable=True)
+    idx_cap = order[:capacity]
+    x_cap = x[idx_cap]
+    a_cap, d1sq, d2sq = ops.assign_top2(x_cap, C, backend=kernel_backend)
+    d1, d2 = _euclid(d1sq), _euclid(d2sq)
+
+    # settled points carry the decayed bound + exact distance ...
+    a_new = jnp.where(settled, a_prev, a_prev)   # placeholder, fixed below
+    d_new = jnp.where(settled, d_a, state.points.d[:b])
+    lb_new = jnp.where(settled, lb_dec, state.points.lb[:b])
+    # ... and the recomputed buffer is scattered back (exact for every
+    # entry, including any settled points that padded the buffer).
+    a_new = a_new.at[idx_cap].set(a_cap)
+    d_new = d_new.at[idx_cap].set(d1)
+    lb_new = lb_new.at[idx_cap].set(d2)
+    overflow = n_need > capacity
+    return a_new, d_new, lb_new, jnp.minimum(n_need, capacity), overflow, None
+
+
+def _assign_elkan(x, state, a_prev, *, b: int):
+    """Paper-faithful tb bounds (supp. Alg. 9/11): l(i,j), one per pair.
+
+    Vectorised semantics (see DESIGN.md): all bound-passing distances are
+    computed at once instead of serially; the final assignment is
+    identical, and ``n_recomputed`` counts the pair-distance computations
+    a serial implementation would have had to do (upper bound thereof).
+    """
+    C = state.stats.C
+    k = C.shape[0]
+    seen = a_prev >= 0
+    l_dec = state.elkan.l[:b] - state.stats.p[None, :]      # eq. (4)
+    d_a = _dist_to_assigned(x, C, a_prev)
+
+    d_all = _euclid(ref.pairwise_dist2(x, C))               # (b, k)
+    cols = jnp.arange(k)[None, :]
+    own = cols == a_prev[:, None]
+    compute = (l_dec < d_a[:, None]) & ~own                 # bound test
+    compute = compute | ~seen[:, None]                      # new pts: all k
+
+    l_new = jnp.where(compute, d_all, l_dec)
+    cand = jnp.where(compute, d_all, jnp.inf)
+    cand = jnp.where(own & seen[:, None], d_a[:, None], cand)
+    a_new = jnp.argmin(cand, axis=1).astype(jnp.int32)
+    d_new = jnp.min(cand, axis=1)
+    n_comp = jnp.sum(compute.astype(jnp.int32)) \
+        + jnp.sum(seen.astype(jnp.int32))                   # + the d_a's
+    return a_new, d_new, None, n_comp, jnp.asarray(False), l_new
+
+
+def nested_round(X: jax.Array, state: KMeansState, *, b: int,
+                 rho: float, bounds: str = "hamerly2",
+                 capacity: Optional[int] = None, use_shalf: bool = True,
+                 kernel_backend: Optional[str] = None,
+                 data_axes: Tuple[str, ...] = ()
+                 ) -> Tuple[KMeansState, RoundInfo]:
+    """One gb/tb round over the nested prefix ``X[:b]`` (b STATIC).
+
+    Covers Alg. 7 (gb-rho), Alg. 9 (tb-rho) and their rho=inf degenerate
+    forms (Alg. 10/11): previously-seen points are reassigned with delta
+    S/v corrections, unseen points ``a(i) == -1`` enter the batch, the
+    centroids move to S/v, and the controller votes on doubling b.
+
+    ``data_axes``: when called inside shard_map with points sharded over
+    these mesh axes, X/state.points are per-shard slices (b is the LOCAL
+    prefix; the global batch is the union of shard prefixes), the S/v/sse
+    deltas are psum-reduced so the replicated stats — and therefore the
+    growth decision — stay bit-identical on every shard.
+    """
+    k = state.stats.C.shape[0]
+    x = X[:b]
+    a_prev = state.points.a[:b]
+
+    if bounds == "none":
+        a_new, d_new, lb2, n_rec, overflow, l_new = \
+            _assign_exhaustive(x, state, a_prev)
+    elif bounds == "hamerly2":
+        a_new, d_new, lb2, n_rec, overflow, l_new = _assign_hamerly2(
+            x, state, a_prev, capacity=capacity, use_shalf=use_shalf,
+            kernel_backend=kernel_backend)
+    elif bounds == "elkan":
+        a_new, d_new, lb2, n_rec, overflow, l_new = \
+            _assign_elkan(x, state, a_prev, b=b)
+    else:
+        raise ValueError(f"unknown bounds {bounds!r}")
+
+    dS, dv = _delta_sv(x, a_prev, a_new, k, kernel_backend)
+    sse = _refresh_sse(d_new, a_new, k)
+    mse_num = jnp.sum(d_new * d_new)
+    mse_den = jnp.asarray(b, jnp.float32)
+    n_changed = jnp.sum(((a_prev >= 0) & (a_new != a_prev))
+                        .astype(jnp.int32))
+    n_active = jnp.asarray(b, jnp.int32)
+    n_rec = n_rec.astype(jnp.int32)
+    overflow = overflow.astype(jnp.int32)
+    if data_axes:
+        (dS, dv, sse, mse_num, mse_den, n_changed, n_active, n_rec,
+         overflow) = jax.lax.psum(
+            (dS, dv, sse, mse_num, mse_den, n_changed, n_active, n_rec,
+             overflow), data_axes)
+
+    stats = dataclasses.replace(state.stats, S=state.stats.S + dS,
+                                v=state.stats.v + dv, sse=sse)
+    stats = centroid_update(stats)
+
+    grow, r_med = controller.should_grow(stats.sse, stats.v, stats.p, rho)
+
+    points = dataclasses.replace(
+        state.points,
+        a=state.points.a.at[:b].set(a_new),
+        d=state.points.d.at[:b].set(d_new))
+    if lb2 is not None:
+        points = dataclasses.replace(points,
+                                     lb=points.lb.at[:b].set(lb2))
+    elkan = state.elkan
+    if l_new is not None:
+        elkan = ElkanBounds(l=state.elkan.l.at[:b].set(l_new))
+
+    info = RoundInfo(
+        batch_mse=mse_num / jnp.maximum(mse_den, 1.0), n_changed=n_changed,
+        n_recomputed=n_rec, n_active=n_active,
+        overflow=overflow.astype(jnp.bool_), grow=grow, r_median=r_med)
+    new_state = dataclasses.replace(state, stats=stats, points=points,
+                                    elkan=elkan, round=state.round + 1)
+    return new_state, info

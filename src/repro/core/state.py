@@ -1,0 +1,140 @@
+"""K-means engine state pytrees.
+
+All state is functional (jax pytrees); the host driver threads it through
+jit'd round functions. Distances are EUCLIDEAN (not squared) everywhere in
+the state — the paper's bound arithmetic (l -= p, sse = sum d^2) is written
+in euclidean distances; kernels return squared distances and the round
+functions take the sqrt once per recomputation.
+
+Conventions:
+  * ``a == -1``  -> point never assigned (not yet in the nested batch).
+  * ``v`` is float32 so it can feed the MXU cluster-sum kernel directly.
+  * per-point arrays are allocated at full N; only the active prefix
+    ``[:b]`` is ever touched by the nested algorithms (b is a static arg of
+    the bucketed round functions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _pytree_dataclass(cls):
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+    return cls
+
+
+@_pytree_dataclass
+class ClusterStats:
+    """Per-cluster running statistics shared by every algorithm."""
+    C: jax.Array          # (k, d) f32 centroids
+    S: jax.Array          # (k, d) f32 cumulative/current sums
+    v: jax.Array          # (k,)  f32 assignment counts
+    sse: jax.Array        # (k,)  f32 sum of squared distances of members
+    p: jax.Array          # (k,)  f32 distance moved in last update
+
+
+@_pytree_dataclass
+class PointState:
+    """Per-point state. Arrays are full-N; nested algorithms touch [:b]."""
+    a: jax.Array          # (N,) int32 last assignment, -1 = never assigned
+    d: jax.Array          # (N,) f32 distance at last (re)computation
+    lb: jax.Array         # (N,) f32 lower bound on 2nd-nearest distance
+                          #      (hamerly2 path; ignored by others)
+
+
+@_pytree_dataclass
+class ElkanBounds:
+    """Paper-faithful per-(i, j) lower bounds (tb-rho reference path)."""
+    l: jax.Array          # (N, k) f32
+
+
+@_pytree_dataclass
+class KMeansState:
+    stats: ClusterStats
+    points: PointState
+    elkan: Optional[ElkanBounds]
+    round: jax.Array      # () int32
+
+
+def init_state(X: jax.Array, k: int, *, bounds: str = "hamerly2",
+               init_idx: jax.Array | None = None) -> KMeansState:
+    """Paper initialisation: the first k points of the (pre-shuffled) data.
+
+    ``init_idx`` overrides with explicit centroid row indices.
+    """
+    n, d = X.shape
+    if init_idx is None:
+        C0 = X[:k].astype(jnp.float32)
+    else:
+        C0 = X[init_idx].astype(jnp.float32)
+    stats = ClusterStats(
+        C=C0,
+        S=jnp.zeros((k, d), jnp.float32),
+        v=jnp.zeros((k,), jnp.float32),
+        sse=jnp.zeros((k,), jnp.float32),
+        p=jnp.zeros((k,), jnp.float32),
+    )
+    points = PointState(
+        a=jnp.full((n,), -1, jnp.int32),
+        d=jnp.zeros((n,), jnp.float32),
+        lb=jnp.zeros((n,), jnp.float32),
+    )
+    elkan = ElkanBounds(l=jnp.zeros((n, k), jnp.float32)) \
+        if bounds == "elkan" else None
+    return KMeansState(stats=stats, points=points, elkan=elkan,
+                       round=jnp.zeros((), jnp.int32))
+
+
+@_pytree_dataclass
+class RoundInfo:
+    """Telemetry returned by every round function (all scalars)."""
+    batch_mse: jax.Array        # mean d^2 over the active batch
+    n_changed: jax.Array        # assignments that changed this round
+    n_recomputed: jax.Array     # points whose distances were recomputed
+    n_active: jax.Array         # active batch size (== b)
+    overflow: jax.Array         # bool: capacity < points needing recompute
+    grow: jax.Array             # bool: controller voted to double b
+    r_median: jax.Array         # median sigma_C/p ratio (controller stat)
+
+
+def centroid_update(stats: ClusterStats) -> ClusterStats:
+    """C <- S/v (empty clusters keep their previous centroid); p <- ||dC||."""
+    safe_v = jnp.maximum(stats.v, 1.0)
+    C_new = jnp.where((stats.v > 0.0)[:, None], stats.S / safe_v[:, None],
+                      stats.C)
+    p = jnp.sqrt(jnp.sum((C_new - stats.C) ** 2, axis=1))
+    return dataclasses.replace(stats, C=C_new, p=p)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def full_mse(X: jax.Array, C: jax.Array, *, chunk: int = 65536) -> jax.Array:
+    """Validation-set MSE: mean squared distance to nearest centroid.
+
+    Chunked over points so huge validation sets never materialise an
+    (n, k) distance matrix.
+    """
+    from repro.kernels import ref
+
+    n = X.shape[0]
+    pad = -n % chunk
+    Xp = jnp.pad(X, ((0, pad), (0, 0))) if pad else X
+    Xc = Xp.reshape(-1, chunk, X.shape[1])
+
+    def body(carry, xc):
+        d2 = ref.pairwise_dist2(xc, C)
+        dmin = jnp.min(d2, axis=1)
+        return carry + jnp.sum(dmin[: chunk]), None
+
+    # mask padded rows out of the final chunk
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), Xc)
+    if pad:
+        d2_last = ref.pairwise_dist2(Xp[n:], C)
+        total = total - jnp.sum(jnp.min(d2_last, axis=1))
+    return total / n

@@ -1,0 +1,70 @@
+"""Data pipelines: nested-prefix k-means sharding + LM token batches.
+
+KMeansShardedSource: the nested-batch schedule needs each device shard to
+hold a contiguous slice whose prefix-union equals the global shuffle
+prefix — handled by the interleave in core.distributed.fit_distributed.
+This module provides the equivalent host-side iterator for streaming
+datasets (points arrive in shuffle order, are round-robined to shards,
+and each shard appends — so shard prefixes always reconstruct the global
+prefix exactly, even under restart).
+
+LMBatches: deterministic, seekable token batches — ``state == (step,)``
+so a restarted trainer resumes mid-epoch bit-identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.data import synthetic
+
+
+@dataclasses.dataclass
+class KMeansShardedSource:
+    """Round-robin shard assignment preserving the nested-prefix property."""
+    X: np.ndarray
+    n_shards: int
+    seed: int = 0
+
+    def __post_init__(self):
+        n = self.X.shape[0]
+        if n % self.n_shards:
+            raise ValueError((n, self.n_shards))
+        rng = np.random.default_rng(self.seed)
+        self.perm = rng.permutation(n)
+
+    def shard(self, s: int) -> np.ndarray:
+        """Shard s holds global-shuffle positions s::n_shards, in order."""
+        return self.X[self.perm[s::self.n_shards]]
+
+    def global_prefix(self, b: int) -> np.ndarray:
+        return self.X[self.perm[:b]]
+
+
+class LMBatches:
+    """Seekable synthetic LM batches: (tokens, labels) of (B, S) int32."""
+
+    def __init__(self, *, vocab: int, batch: int, seq: int,
+                 n_tokens: int = 2_000_000, seed: int = 0):
+        self.tokens = synthetic.lm_tokens(n_tokens, vocab=vocab, seed=seed)
+        self.batch, self.seq = batch, seq
+        self.per_step = batch * (seq + 1)
+        self.n_steps = len(self.tokens) // self.per_step
+
+    def __len__(self) -> int:
+        return self.n_steps
+
+    def at(self, step: int) -> Dict[str, np.ndarray]:
+        i = (step % self.n_steps) * self.per_step
+        chunk = self.tokens[i: i + self.per_step].reshape(
+            self.batch, self.seq + 1)
+        return {"tokens": chunk[:, :-1].astype(np.int32),
+                "labels": chunk[:, 1:].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.at(step)
+            step += 1

@@ -1,0 +1,103 @@
+"""Per-cluster sum/count as a one-hot MXU matmul Pallas kernel.
+
+TPU scatter-adds serialise; for small-to-moderate k the MXU-friendly form
+``S = onehot(a).T @ x`` is the idiomatic replacement for segment_sum. Used
+for the bulk cluster-sum over newly-entered points in nested rounds.
+
+Grid: (d_blocks, n_blocks) with n sequential so the (k, bd) output block
+accumulates across point tiles; counts are folded on the first d block only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cluster_sum_kernel(x_ref, a_ref, w_ref, s_ref, v_ref, *, k: int):
+    d_idx = pl.program_id(0)
+    n_idx = pl.program_id(1)
+
+    x = x_ref[...].astype(jnp.float32)             # (bn, bd)
+    a = a_ref[...]                                 # (bn,)
+    w = w_ref[...].astype(jnp.float32)             # (bn,) weights
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    onehot = jnp.where(row == a[:, None], w[:, None], 0.0)   # (bn, k)
+
+    part = jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (k, bd)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        s_ref[...] = part
+
+    @pl.when(n_idx != 0)
+    def _acc():
+        s_ref[...] += part
+
+    @pl.when(d_idx == 0)
+    def _counts():
+        vpart = jnp.sum(onehot, axis=0)            # (k,)
+
+        @pl.when(n_idx == 0)
+        def _vinit():
+            v_ref[...] = vpart
+
+        @pl.when(n_idx != 0)
+        def _vacc():
+            v_ref[...] += vpart
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "bd", "interpret"))
+def cluster_sum_pallas(x: jax.Array, a: jax.Array, k: int, *,
+                       weights: jax.Array | None = None, bn: int = 256,
+                       bd: int = 256, interpret: bool = False):
+    """S (k, d) f32, v (k,) f32 — weighted per-cluster sums of x by a.
+
+    Padded points get weight 0 (and cluster 0) so they contribute nothing.
+    """
+    n, d = x.shape
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    n_pad = -n % bn
+    d_pad = -d % bd
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+        a = jnp.pad(a, (0, n_pad))
+        weights = jnp.pad(weights, (0, n_pad))
+    if d_pad:
+        x = jnp.pad(x, ((0, 0), (0, d_pad)))
+    np_, dp = x.shape
+
+    grid = (dp // bd, np_ // bn)
+    kernel = functools.partial(_cluster_sum_kernel, k=k)
+    s, v = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda di, ni: (ni, di)),
+            pl.BlockSpec((bn,), lambda di, ni: (ni,)),
+            pl.BlockSpec((bn,), lambda di, ni: (ni,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, bd), lambda di, ni: (0, di)),
+            pl.BlockSpec((k,), lambda di, ni: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, dp), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        # the (k,) counts output block is revisited across BOTH grid dims
+        # (it is only written when d_idx == 0), so the d dimension must be
+        # sequential too — revisited output blocks are illegal on parallel
+        # dims in Mosaic.
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(x, a, weights)
+    return s[:, :d], v

@@ -1,0 +1,118 @@
+"""Fused pairwise-distance + top-2 argmin Pallas TPU kernel.
+
+The k-means assignment hot spot. For a tile of points the MXU computes the
+``x @ c.T`` Gram block while the VPU fuses the ``|x|^2 - 2 x.c + |c|^2``
+expansion and a running (min, 2nd-min, argmin) reduction carried across the
+centroid grid dimension in the (revisited) output blocks.
+
+Grid: (n_blocks, k_blocks) with the k dimension sequential ("arbitrary") so
+output blocks act as accumulators; the point dimension is parallel.
+
+BlockSpecs keep an (bn, d) X tile and a (bk, d) centroid tile resident in
+VMEM; bn/bk default to MXU-aligned 256/128. d is kept whole per tile —
+k-means dims (784/1024/2048) fit comfortably: a 256x2048 f32 tile is 2 MiB
+against ~16 MiB VMEM.
+
+Padded centroids carry +inf norms so they can never win the argmin; padded
+points produce garbage rows that the wrapper slices off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = float("inf")   # python literal: pallas kernels may not capture
+                          # traced constants
+
+
+def _assign_kernel(x_ref, c_ref, cn_ref, a_ref, d1_ref, d2_ref, *, bk: int):
+    """One (i, k) grid step: fold centroid tile k into running top-2."""
+    k_idx = pl.program_id(1)
+
+    x = x_ref[...].astype(jnp.float32)             # (bn, d)
+    c = c_ref[...].astype(jnp.float32)             # (bk, d)
+    cn = cn_ref[...].astype(jnp.float32)           # (bk,)
+
+    xn = jnp.sum(x * x, axis=1, keepdims=True)     # (bn, 1)
+    dot = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (bn, bk) on the MXU
+    d2 = jnp.maximum(xn - 2.0 * dot + cn[None, :], 0.0)
+    # padded centroids have cn = +inf -> d2 = +inf, never selected
+
+    # top-2 within this centroid tile
+    b1 = jnp.min(d2, axis=1)                                    # (bn,)
+    bi = jnp.argmin(d2, axis=1).astype(jnp.int32) + k_idx * bk  # global idx
+    col = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1) + k_idx * bk
+    d2_wo_min = jnp.where(col == bi[:, None], _NEG_BIG, d2)
+    b2 = jnp.min(d2_wo_min, axis=1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        a_ref[...] = bi
+        d1_ref[...] = b1
+        d2_ref[...] = b2
+
+    @pl.when(k_idx != 0)
+    def _fold():
+        r1 = d1_ref[...]
+        r2 = d2_ref[...]
+        ri = a_ref[...]
+        new1 = jnp.minimum(r1, b1)
+        newi = jnp.where(b1 < r1, bi, ri)
+        new2 = jnp.minimum(jnp.maximum(r1, b1), jnp.minimum(r2, b2))
+        a_ref[...] = newi
+        d1_ref[...] = new1
+        d2_ref[...] = new2
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def assign_top2_pallas(x: jax.Array, c: jax.Array, *, bn: int = 256,
+                       bk: int = 128, interpret: bool = False):
+    """(a, d1, d2) = fused nearest/2nd-nearest centroid search.
+
+    x: (n, d); c: (k, d). Returns int32 (n,), f32 (n,), f32 (n,) with
+    SQUARED distances. n is padded to bn, k to bk internally.
+    """
+    n, d = x.shape
+    k = c.shape[0]
+    n_pad = -n % bn
+    k_pad = -k % bk
+
+    cn = jnp.sum(c.astype(jnp.float32) ** 2, axis=1)
+    if k_pad:
+        c = jnp.pad(c, ((0, k_pad), (0, 0)))
+        cn = jnp.pad(cn, (0, k_pad), constant_values=jnp.inf)
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    np_, kp = x.shape[0], c.shape[0]
+
+    grid = (np_ // bn, kp // bk)
+    kernel = functools.partial(_assign_kernel, bk=bk)
+    a, d1, d2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, c, cn)
+    return a[:n], d1[:n], d2[:n]

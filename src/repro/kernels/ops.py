@@ -1,0 +1,55 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends (this container) the kernels run in interpret mode so
+the kernel bodies execute exactly as written; on TPU they compile to Mosaic.
+``backend="ref"`` routes to the pure-jnp oracle (used for tiny shapes where
+padding to MXU tiles would dominate, and as the semantic fallback).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cluster_sum import cluster_sum_pallas
+from repro.kernels.kmeans_assign import assign_top2_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto_backend(n: int, k: int) -> str:
+    if _on_tpu():
+        return "pallas"
+    # interpret-mode pallas is a python-level emulation: correct but slow.
+    # On CPU the oracle IS the fast path; pallas stays available for
+    # explicit kernel validation.
+    return "ref"
+
+
+def assign_top2(x: jax.Array, c: jax.Array, *, backend: str | None = None,
+                bn: int = 256, bk: int = 128):
+    """(a, d1_sq, d2_sq): nearest / 2nd-nearest squared distances."""
+    n, k = x.shape[0], c.shape[0]
+    backend = backend or _auto_backend(n, k)
+    if backend == "ref":
+        return ref.assign_top2_ref(x, c)
+    return assign_top2_pallas(x, c, bn=bn, bk=min(bk, _pad128(k)),
+                              interpret=not _on_tpu())
+
+
+def cluster_sum(x: jax.Array, a: jax.Array, k: int, *,
+                weights: jax.Array | None = None,
+                backend: str | None = None, bn: int = 256, bd: int = 256):
+    """Weighted per-cluster sums S (k,d) and counts v (k,)."""
+    backend = backend or _auto_backend(x.shape[0], k)
+    if backend == "ref":
+        return ref.cluster_sum_ref(x, a, k, weights=weights)
+    s, v = cluster_sum_pallas(x, a, _pad128(k), weights=weights, bn=bn,
+                              bd=bd, interpret=not _on_tpu())
+    return s[:k], v[:k]
+
+
+def _pad128(k: int) -> int:
+    return k + (-k % 128)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics; kernels are asserted allclose against them
+across shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_dist2(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Squared euclidean distances, (n, k) for x (n, d), c (k, d). f32.
+
+    Row norms via einsum (lowers to a dot): XLA-CPU otherwise
+    materialises the full x*x intermediate — 0.55 TB/device on the
+    kmeans_xl dry-run (EXPERIMENTS.md §Perf iteration 3a).
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xn = jnp.einsum("nd,nd->n", x, x)[:, None]          # (n, 1)
+    cn = jnp.einsum("kd,kd->k", c, c)[None, :]          # (1, k)
+    d2 = xn - 2.0 * (x @ c.T) + cn
+    return jnp.maximum(d2, 0.0)
+
+
+def assign_top2_ref(x: jax.Array, c: jax.Array):
+    """For each point: (nearest-centroid index, min dist^2, 2nd-min dist^2).
+
+    The 2nd-min initialises the Hamerly lower bound. k == 1 returns +inf
+    as the second distance.
+    """
+    d2 = pairwise_dist2(x, c)
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    d1 = jnp.min(d2, axis=1)
+    k = c.shape[0]
+    if k == 1:
+        d_2nd = jnp.full_like(d1, jnp.inf)
+    else:
+        masked = jnp.where(jax.nn.one_hot(a, k, dtype=bool), jnp.inf, d2)
+        d_2nd = jnp.min(masked, axis=1)
+    return a, d1, d_2nd
+
+
+def cluster_sum_ref(x: jax.Array, a: jax.Array, k: int, *,
+                    weights: jax.Array | None = None):
+    """Per-cluster sums S (k, d) and counts v (k,) of x grouped by a.
+
+    ``weights`` (n,) scales each point's contribution (used for +1/-1 delta
+    updates in mb-f / nested rounds).
+    """
+    x = x.astype(jnp.float32)
+    if weights is None:
+        weights = jnp.ones((x.shape[0],), jnp.float32)
+    xw = x * weights[:, None]
+    s = jax.ops.segment_sum(xw, a, num_segments=k)
+    v = jax.ops.segment_sum(weights, a, num_segments=k)
+    return s, v

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+The dry-run lowers against these; the same builders serve the smoke tests
+(who turn them into real arrays at reduced scale).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import model as M
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def token_split(cfg: ModelConfig, S: int) -> Tuple[int, int]:
+    """(prefix_len, token_len): VLM reserves a patch prefix inside S."""
+    if cfg.family == "vlm":
+        p = cfg.encoder.n_ctx
+        return p, S - p
+    return 0, S
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    p, st = token_split(cfg, S)
+    batch = {"tokens": SDS((B, st), jnp.int32),
+             "labels": SDS((B, st), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = SDS((B, cfg.encoder.n_ctx,
+                               cfg.encoder.d_frontend), L.CDTYPE)
+    if cfg.family == "vlm":
+        batch["patches"] = SDS((B, p, cfg.d_model), L.CDTYPE)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Dict[str, Any]:
+    b = train_batch_specs(cfg, shape)
+    b.pop("labels")
+    return b
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """token + KV/SSM cache ShapeDtypeStructs for one decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(functools.partial(
+        M.make_decode_cache, cfg, batch=B, cache_len=S))
+    return {"token": SDS((B, 1), jnp.int32), "cache": cache}
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(M.init_params, cfg=cfg), key)
+
+
+def abstract_opt_state(params_shape):
+    return jax.eval_shape(adamw.init, params_shape)
+
+
+def materialize(tree, seed: int = 0):
+    """Turn a spec tree into real arrays (smoke tests, reduced configs)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            out.append(jax.random.randint(k, leaf.shape, 0, 128,
+                                          leaf.dtype))
+        else:
+            out.append(jax.random.normal(k, leaf.shape, jnp.float32)
+                       .astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

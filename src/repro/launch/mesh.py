@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = 1
+    for s in shape:
+        n *= s
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(jax.devices())}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

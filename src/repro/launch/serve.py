@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill + greedy decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch tinyllama-1.1b --reduced --batch 4 --prompt-len 32 \
+        --gen 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.train import step as tstep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    B, P = args.batch, args.prompt_len
+    cache_len = P + args.gen + (cfg.encoder.n_ctx
+                                if cfg.family == "vlm" else 0)
+
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, P)))}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros(
+            (B, cfg.encoder.n_ctx, cfg.encoder.d_frontend), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros(
+            (B, cfg.encoder.n_ctx, cfg.d_model), jnp.bfloat16)
+
+    prefill = jax.jit(tstep.make_prefill_step(cfg, cache_len=cache_len))
+    decode = jax.jit(tstep.make_decode_step(cfg), donate_argnums=(2,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.concatenate(out, axis=1)
+    print(f"{args.arch}: prefill {B}x{P} in {t_prefill * 1e3:.1f}ms; "
+          f"{args.gen - 1} decode steps in {t_decode * 1e3:.1f}ms "
+          f"({B * (args.gen - 1) / max(t_decode, 1e-9):.0f} tok/s)")
+    print("generated token ids (row 0):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

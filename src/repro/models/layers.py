@@ -1,0 +1,748 @@
+"""Model-zoo building blocks: norms, RoPE, attention, MLP, MoE, Mamba2 SSD.
+
+Everything is functional: ``init_*`` returns a params dict, ``*_fwd`` maps
+(params, activations) -> activations. Params are stored bf16 (production
+mixed precision); norms, softmax, SSD decays and loss run in f32.
+
+Attention comes in three entry points:
+  * ``flash_attention``   training/prefill: two-level chunked running-max
+                          softmax (q-chunk scan over kv-chunk scan), peak
+                          memory q_chunk x kv_chunk regardless of S.
+  * ``decode_attention``  one new token against a (B, S, KV, Dh) cache;
+                          written as reductions over the cache's S dim so
+                          GSPMD turns a sequence-sharded cache into
+                          flash-decoding-style partial-softmax collectives.
+  * ``cross_attention``   enc-dec (whisper): full (non-causal) attention
+                          against a precomputed encoder context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+Params = Dict[str, Any]
+PDTYPE = jnp.bfloat16   # parameter storage dtype
+CDTYPE = jnp.bfloat16   # activation compute dtype
+
+
+# --------------------------------------------------------------------------
+# activation sharding constraints (no-ops outside a jax.set_mesh context)
+# --------------------------------------------------------------------------
+
+def _ambient_mesh():
+    """The mesh visible here — abstract inside jit traces, else concrete."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    try:
+        mesh = jax.sharding.get_mesh()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
+def _mesh_axes() -> tuple:
+    mesh = _ambient_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def dp_axes() -> tuple:
+    return tuple(a for a in _mesh_axes() if a != "model")
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh.
+
+    spec entries: "dp" -> the data axes tuple, "tp" -> "model" (dropped if
+    the dim doesn't divide), None -> unsharded. No mesh set -> identity,
+    so reduced-config smoke tests run unchanged on one device.
+    """
+    axes = _mesh_axes()
+    if not axes:
+        return x
+    import numpy as _np
+    mesh = _ambient_mesh()
+    out = []
+    for dim, s in enumerate(spec):
+        if s == "dp":
+            ax = dp_axes()
+            size = int(_np.prod([mesh.shape[a] for a in ax]))
+            out.append(ax if ax and x.shape[dim] % size == 0 else None)
+        elif s == "tp":
+            ok = "model" in axes and x.shape[dim] % mesh.shape["model"] == 0
+            out.append("model" if ok else None)
+        else:
+            out.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*out))
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               dtype=PDTYPE):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.q_dim()),
+        "wk": dense_init(ks[1], d, cfg.kv_dim()),
+        "wv": dense_init(ks[2], d, cfg.kv_dim()),
+        "wo": dense_init(ks[3], cfg.q_dim(), d),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim(),), PDTYPE)
+        p["bk"] = jnp.zeros((cfg.kv_dim(),), PDTYPE)
+        p["bv"] = jnp.zeros((cfg.kv_dim(),), PDTYPE)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ModelConfig):
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = x.shape[0], x.shape[1]
+    q = constrain(q.reshape(B, S, cfg.n_heads, cfg.head_dim),
+                  "dp", None, "tp", None)
+    k = constrain(k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "dp", None, "tp", None)
+    v = constrain(v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "dp", None, "tp", None)
+    return q, k, v
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (chunked-attention tiling)."""
+    c = min(S, target)
+    while S % c:
+        c -= 1
+    return c
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, q_chunk: int = 512,
+                    kv_chunk: int = 1024,
+                    q_offset: jax.Array | int = 0) -> jax.Array:
+    """Chunked attention with running-max softmax (flash pattern).
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh) with H a multiple of KV (GQA).
+    Peak score memory is q_chunk x kv_chunk per (batch, head).
+    ``q_offset``: global position of q's first row (context parallelism).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = _pick_chunk(Sq, q_chunk)
+    kv_chunk = _pick_chunk(Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = Dh ** -0.5
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, Dh)
+    kc = k.reshape(B, nk, kv_chunk, KV, Dh)
+    vc = v.reshape(B, nk, kv_chunk, KV, Dh)
+
+    def q_body(_, qi_and_chunk):
+        qi, qx = qi_and_chunk               # qx: (B, q_chunk, KV, G, Dh)
+
+        # remat: the backward recomputes each chunk's scores instead of
+        # saving (q_chunk x kv_chunk) probability residuals per iteration
+        # — this IS flash attention's memory story, fwd and bwd.
+        @jax.checkpoint
+        def kv_body(carry, ki_and_chunk):
+            m_prev, l_prev, acc = carry
+            ki, kx, vx = ki_and_chunk
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qx.astype(CDTYPE),
+                           kx.astype(CDTYPE),
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p_ = jnp.exp(s - m_safe[..., None])
+            p_ = jnp.where(jnp.isfinite(s), p_, 0.0)
+            alpha = jnp.where(jnp.isfinite(m_prev),
+                              jnp.exp(m_prev - m_safe), 0.0)
+            l_new = l_prev * alpha + jnp.sum(p_, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p_.astype(CDTYPE),
+                            vx.astype(CDTYPE),
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, q_chunk, Dh) -> (B, q_chunk, KV, G, Dh)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_body), None,
+                           (jnp.arange(nq), qc.swapaxes(0, 1)))
+    # outs: (nq, B, q_chunk, KV, G, Dh)
+    out = outs.swapaxes(0, 1).reshape(B, Sq, H, Dh)
+    return out
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, 1, H, Dh); caches: (B, S, KV, Dh); pos: () current length.
+    Written as reductions over S so a sequence-sharded cache lowers to
+    partial-softmax all-reduces (flash-decoding) rather than a gather.
+    """
+    B, _, H, Dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = Dh ** -0.5
+    qh = q.reshape(B, KV, G, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh.astype(CDTYPE),
+                   k_cache.astype(CDTYPE),
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(CDTYPE),
+                     v_cache.astype(CDTYPE),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def _seqpar_flash(q, k, v, *, causal, q_chunk, kv_chunk, mesh):
+    """Context-parallel attention for archs whose head count doesn't
+    divide the model axis (llama3.2: 24 heads, whisper: 6, qwen1.5: 40):
+    q is sharded over "model" on the SEQUENCE dim (full heads per shard),
+    k/v replicated across it; each shard runs flash over its q rows with
+    the correct global causal offset. Recovers the model axis for
+    attention where head-parallelism can't — the alternative (replicated
+    attention) wastes |model| x the FLOPs (measured 16x on llama3.2,
+    useful_ratio 0.06; see EXPERIMENTS.md §Perf)."""
+    from jax.sharding import PartitionSpec as P
+    tp = mesh.shape["model"]
+    S_loc = q.shape[1] // tp
+
+    def body(qL, kF, vF):
+        off = jax.lax.axis_index("model") * S_loc
+        return flash_attention(qL, kF.astype(CDTYPE), vF.astype(CDTYPE),
+                               causal=causal,
+                               q_chunk=min(q_chunk, S_loc),
+                               kv_chunk=kv_chunk, q_offset=off)
+
+    # k/v enter as f32: their backward cotangent psum over "model" is then
+    # an f32 all-reduce (XLA CPU's AllReducePromotion pass check-fails on
+    # the bf16 one; on TPU either dtype is fine).
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, "model", None, None), P(), P()),
+        out_specs=P(None, "model", None, None),
+        axis_names={"model"}, check_vma=False)(
+        q, k.astype(jnp.float32), v.astype(jnp.float32))
+
+
+def attention_fwd(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array, causal: bool = True,
+                  q_chunk: int = 512, kv_chunk: int = 1024,
+                  use_rope: bool = True):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = _qkv(p, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    mesh = _ambient_mesh()
+    seqpar = (mesh is not None and "model" in mesh.axis_names
+              and cfg.n_heads % mesh.shape["model"] != 0
+              and q.shape[1] % mesh.shape["model"] == 0 and causal)
+    if seqpar:
+        o = _seqpar_flash(q, k, v, causal=causal, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, mesh=mesh)
+    else:
+        o = flash_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    B, S = x.shape[0], x.shape[1]
+    out = o.reshape(B, S, cfg.q_dim()) @ p["wo"]
+    return constrain(out, "dp", None, None), (k, v)
+
+
+def attention_decode_fwd(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                         k_cache: jax.Array, v_cache: jax.Array,
+                         pos: jax.Array, use_rope: bool = True):
+    """One-token attention step. x: (B, 1, D). Returns (out, new caches)."""
+    q, k, v = _qkv(p, x, cfg)
+    if use_rope:
+        ppos = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q = apply_rope(q, ppos, cfg.rope_theta)
+        k = apply_rope(k, ppos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    o = decode_attention(q, k_cache, v_cache, pos)
+    out = o.reshape(x.shape[0], 1, cfg.q_dim()) @ p["wo"]
+    return out, (k_cache, v_cache)
+
+
+def init_cross_attention(key, cfg: ModelConfig) -> Params:
+    return init_attention(key, dataclasses.replace(cfg, attn_bias=False))
+
+
+def cross_attention_fwd(p: Params, x: jax.Array, enc_kv: Tuple[jax.Array,
+                                                               jax.Array],
+                        cfg: ModelConfig):
+    """Decoder-side cross attention against precomputed encoder K/V."""
+    B, S = x.shape[0], x.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k, v = enc_kv
+    o = flash_attention(q, k, v, causal=False)
+    return o.reshape(B, S, cfg.q_dim()) @ p["wo"]
+
+
+def cross_kv(p: Params, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute encoder-side K/V once per request (whisper serving)."""
+    B, S = enc_out.shape[0], enc_out.shape[1]
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# dense MLP (SwiGLU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"w_gate": dense_init(ks[0], d, f),
+            "w_up": dense_init(ks[1], d, f),
+            "w_down": dense_init(ks[2], f, d)}
+
+
+def mlp_fwd(p: Params, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    g = constrain(g, "dp", None, "tp")
+    h = g * constrain(x @ p["w_up"], "dp", None, "tp")
+    return constrain(h @ p["w_down"], "dp", None, None)
+
+
+# --------------------------------------------------------------------------
+# MoE (top-k router, capacity dispatch, EP over the "model" axis)
+# --------------------------------------------------------------------------
+
+def init_moe(key, d: int, moe: MoEConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    e, f = moe.n_experts, moe.d_expert_ff
+
+    def estack(k_, din, dout):
+        return (jax.random.normal(k_, (e, din, dout), jnp.float32)
+                * din ** -0.5).astype(PDTYPE)
+
+    return {"router": dense_init(ks[0], d, e, dtype=jnp.float32),
+            "w_gate": estack(ks[1], d, f),
+            "w_up": estack(ks[2], d, f),
+            "w_down": estack(ks[3], f, d)}
+
+
+def moe_fwd(p: Params, x: jax.Array, moe: MoEConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based top-k MoE. x: (B, S, D) -> (out, aux_loss).
+
+    Under a production mesh this routes to ``_moe_fwd_ep`` — a manual
+    (shard_map) expert-parallel dispatch in which every (data, model)
+    device buckets ITS OWN data shard's tokens for ITS OWN expert shard
+    entirely locally; the only cross-device traffic is the per-layer
+    (T, D) combine psum over "model" plus the usual FSDP weight gathers.
+    (The naive GSPMD lowering of the E-sharded scatter-add all-reduces
+    whole (E, cap, D) buffers — measured 15.9 TB/device/step on
+    qwen3-moe train_4k; see EXPERIMENTS.md §Perf.)
+
+    Without a mesh (smoke tests) the dense single-device path runs.
+    """
+    mesh = _ambient_mesh()
+    if mesh is not None and "model" in mesh.axis_names and x.shape[1] > 1:
+        # S == 1 (decode) stays on the weight-stationary GSPMD path: EP's
+        # per-layer FSDP weight gathers dwarf one token's expert compute
+        # (measured 8.8x regression on qwen3 decode_32k; §Perf).
+        tp = mesh.shape["model"]
+        dp = dp_axes()
+        import numpy as _np
+        dp_total = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        if (moe.n_experts % tp == 0
+                and x.shape[0] % dp_total == 0):
+            return _moe_fwd_ep(p, x, moe, mesh)
+    return _moe_fwd_dense(p, x, moe)
+
+
+def _moe_fwd_dense(p: Params, x: jax.Array, moe: MoEConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Single-device reference dispatch (GShard-style, sort-free)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = moe.n_experts, moe.top_k
+    cap = int(moe.capacity_factor * T * K / E + 0.999)
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                   # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # rank of each (token, choice) within its expert, token-major order
+    flat_e = top_e.reshape(T * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (T*K, E)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)             # exclusive
+    rank = jnp.sum(rank * onehot, axis=-1)                   # (T*K,)
+    valid = rank < cap
+    slot = flat_e * cap + jnp.where(valid, rank, 0)
+
+    x_rep = jnp.repeat(xt, K, axis=0)                        # (T*K, D)
+    w = jnp.where(valid, top_p.reshape(T * K), 0.0)
+    buf = jnp.zeros((E * cap, D), CDTYPE)
+    buf = buf.at[slot].add(jnp.where(valid[:, None], x_rep, 0.0)
+                           .astype(CDTYPE))
+    buf = constrain(buf.reshape(E, cap, D), "tp", None, None)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"],
+                               preferred_element_type=jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    y = jnp.einsum("ecf,efd->ecd", (g * u).astype(CDTYPE), p["w_down"],
+                   preferred_element_type=jnp.float32)       # (E, cap, D)
+    y = constrain(y, "tp", None, None)
+
+    y_tok = y.reshape(E * cap, D)[slot]                      # (T*K, D)
+    out = jnp.sum((y_tok * w[:, None]).reshape(T, K, D), axis=1)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32),
+                  axis=0)
+    aux = E * jnp.sum(me * ce)
+    out = constrain(out.reshape(B, S, D).astype(x.dtype), "dp", None, None)
+    return out, aux
+
+
+def _moe_fwd_ep(p: Params, x: jax.Array, moe: MoEConfig, mesh
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Manual expert-parallel dispatch (see moe_fwd docstring).
+
+    shard_map over ALL mesh axes: batch manual over the data axes, experts
+    manual over "model". Each device buckets its local tokens for its
+    local experts with a local capacity (cf * T_local * K / E per expert,
+    the standard per-shard capacity semantics of EP systems), runs the
+    expert FFNs on FSDP-gathered weights, and psums the combine over
+    "model".
+    """
+    from jax.sharding import PartitionSpec as P
+
+    dp = dp_axes()
+    E, K = moe.n_experts, moe.top_k
+    tp = mesh.shape["model"]
+    e_loc = E // tp
+    fsdp_ok = ("data" in mesh.axis_names
+               and p["w_gate"].shape[1] % mesh.shape["data"] == 0
+               and p["w_down"].shape[1] % mesh.shape["data"] == 0)
+    # matches param_specs: (E -> model, dim1 -> data FSDP, dim2 -> None)
+    w_spec = P("model", "data" if fsdp_ok else None, None)
+
+    def body(xb, router, wg, wu, wd):
+        B_loc, S, D = xb.shape
+        T = B_loc * S
+        cap = int(moe.capacity_factor * T * K / E + 0.999)
+        xt = xb.reshape(T, D)
+        if fsdp_ok:   # FSDP gather of this layer's local expert weights
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=1, tiled=True)
+
+        logits = xt.astype(jnp.float32) @ router            # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)              # (T, K)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        e_lo = jax.lax.axis_index("model") * e_loc
+        flat_e = top_e.reshape(T * K)
+        loc = flat_e - e_lo                                  # local id
+        mine = (loc >= 0) & (loc < e_loc)
+        loc = jnp.where(mine, loc, 0)
+        onehot = jax.nn.one_hot(loc, e_loc, dtype=jnp.int32) \
+            * mine[:, None].astype(jnp.int32)                # (T*K, e_loc)
+        rank = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot,
+                       axis=-1)
+        valid = mine & (rank < cap)
+        slot = loc * cap + jnp.where(valid, rank, 0)
+
+        w = jnp.where(valid, top_p.reshape(T * K), 0.0)
+        x_rep = jnp.repeat(xt, K, axis=0)
+        buf = jnp.zeros((e_loc * cap, D), CDTYPE)
+        buf = buf.at[slot].add(
+            jnp.where(valid[:, None], x_rep, 0.0).astype(CDTYPE))
+        buf = buf.reshape(e_loc, cap, D)
+
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg,
+                                   preferred_element_type=jnp.float32))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu,
+                       preferred_element_type=jnp.float32)
+        y = jnp.einsum("ecf,efd->ecd", (g * u).astype(CDTYPE), wd,
+                       preferred_element_type=jnp.float32)
+
+        y_tok = y.reshape(e_loc * cap, D)[slot]              # (T*K, D)
+        part = jnp.sum((y_tok * w[:, None]).reshape(T, K, D), axis=1)
+        out = jax.lax.psum(part.astype(jnp.float32), "model")
+
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32),
+                      axis=0)
+        aux = E * jnp.sum(me * ce)
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return out.reshape(B_loc, S, D).astype(xb.dtype), aux
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp if dp else None, None, None), P(None, None),
+                  w_spec, w_spec, w_spec),
+        out_specs=(P(dp if dp else None, None, None), P()),
+        check_vma=False)(x, p["router"], p["w_gate"], p["w_up"],
+                         p["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD — state-space duality, chunked scan)
+# --------------------------------------------------------------------------
+
+def init_mamba(key, d: int, ssm: SSMConfig) -> Params:
+    """Mamba2 block params. The input projection is stored per COMPONENT
+    (z, x, B, C, dt) rather than fused, so each output is cleanly
+    TP-shardable (z/x/dt shard over heads on "model"; the small shared
+    B/C group projections stay replicated)."""
+    d_in = ssm.expand * d
+    nh = d_in // ssm.head_dim
+    gn = ssm.n_groups * ssm.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d, d_in),
+        "wx": dense_init(ks[1], d, d_in),
+        "wB": dense_init(ks[2], d, gn),
+        "wC": dense_init(ks[3], d, gn),
+        "wdt": dense_init(ks[4], d, nh),
+        "conv_x": (jax.random.normal(ks[5], (ssm.d_conv, d_in),
+                                     jnp.float32) * 0.1).astype(PDTYPE),
+        "conv_bc": (jax.random.normal(ks[6], (ssm.d_conv, 2 * gn),
+                                      jnp.float32) * 0.1).astype(PDTYPE),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), PDTYPE),
+        "out_proj": dense_init(ks[7], d_in, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv, width d_conv. x: (B, L, C); w: (d_conv, C).
+
+    Returns (y, new_state) where state is the trailing (d_conv-1) inputs.
+    """
+    dconv = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dconv - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+            for i in range(dconv))
+    new_state = xp[:, -(dconv - 1):]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _ssd_proj(p: Params, u: jax.Array, ssm: SSMConfig, d: int,
+              conv_state: Optional[Dict[str, jax.Array]]):
+    """Project u -> (z, x, B, C, dt) and run the causal convs."""
+    d_in = ssm.expand * d
+    nh = d_in // ssm.head_dim
+    gn = ssm.n_groups * ssm.d_state
+    z = constrain(u @ p["wz"], "dp", None, "tp")
+    xr = constrain(u @ p["wx"], "dp", None, "tp")
+    bc = jnp.concatenate([u @ p["wB"], u @ p["wC"]], axis=-1)
+    dt = constrain(u @ p["wdt"], "dp", None, "tp")
+    cs_x = None if conv_state is None else conv_state["x"]
+    cs_bc = None if conv_state is None else conv_state["bc"]
+    xr, ns_x = _causal_conv(xr, p["conv_x"], cs_x)
+    bc, ns_bc = _causal_conv(bc, p["conv_bc"], cs_bc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    return z, xr, Bm, Cm, dt, d_in, nh, gn, {"x": ns_x, "bc": ns_bc}
+
+
+def mamba_fwd(p: Params, u: jax.Array, ssm: SSMConfig, d: int,
+              *, init_state=None, return_state: bool = False):
+    """Chunked SSD forward. u: (B, L, D). L must divide by ssm.chunk.
+
+    Scan over chunks: within a chunk the quadratic (Q x Q) dual form runs
+    on the MXU; across chunks a (nh, hd, N) state carries the recurrence.
+    """
+    B, L, _ = u.shape
+    Q = min(ssm.chunk, L)
+    pad = -L % Q
+    if pad:
+        assert init_state is None, "chunk-pad + carried state unsupported"
+        # FRONT-pad to a chunk multiple: zero inputs contribute nothing to
+        # states or outputs (x=0 ⇒ dt·x·B = 0), and the initial state is
+        # zero, so real-token outputs and the final state are unchanged.
+        u = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+        L = L + pad
+    nc = L // Q
+    conv_state = None if init_state is None else init_state["conv"]
+    z, xs, Bm, Cm, dt, d_in, nh, gn, conv_out_state = \
+        _ssd_proj(p, u, ssm, d, conv_state)
+    hd, N, G = ssm.head_dim, ssm.d_state, ssm.n_groups
+
+    xh = xs.reshape(B, nc, Q, nh, hd)
+    Bh = Bm.reshape(B, nc, Q, G, N)
+    Ch = Cm.reshape(B, nc, Q, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"]).reshape(B, nc, Q, nh)
+    A = -jnp.exp(p["A_log"])                                  # (nh,)
+    dA = dt * A[None, None, None, :]                          # (B,nc,Q,nh)
+    # heads -> groups map
+    hpg = nh // G
+
+    def chunk_body(state, inp):
+        xq, Bq, Cq, dtq, dAq = inp        # (B,Q,...)
+        seg = jnp.cumsum(dAq, axis=1)                          # (B,Q,nh)
+        tot = seg[:, -1:]                                      # (B,1,nh)
+        # intra-chunk dual form
+        Bg = jnp.repeat(Bq, hpg, axis=2)                       # (B,Q,nh,N)
+        Cg = jnp.repeat(Cq, hpg, axis=2)
+        Lmat = jnp.exp(seg[:, :, None, :] - seg[:, None, :, :])  # (B,Q,Q,nh)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(causal[None, :, :, None], Lmat, 0.0)
+        scores = jnp.einsum("bqhn,bshn->bqsh", Cg, Bg,
+                            preferred_element_type=jnp.float32)
+        scores = scores * Lmat * dtq[:, None, :, :]            # (B,Q,Q,nh)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp",
+                             scores.astype(CDTYPE), xq,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", Cg.astype(CDTYPE),
+                             state.astype(CDTYPE),
+                             preferred_element_type=jnp.float32)
+        y_inter = y_inter * jnp.exp(seg)[..., None]
+        # new chunk state
+        decay_in = jnp.exp(tot - seg) * dtq                    # (B,Q,nh)
+        st_local = jnp.einsum("bqhp,bqhn,bqh->bhpn",
+                              xq.astype(jnp.float32), Bg, decay_in,
+                              preferred_element_type=jnp.float32)
+        state = state * jnp.exp(tot)[:, 0, :, None, None] + st_local
+        return state, (y_intra + y_inter)
+
+    st0 = (jnp.zeros((B, nh, hd, N), jnp.float32) if init_state is None
+           else init_state["ssm"])
+    xc = xh.swapaxes(0, 1)
+    state, ys = jax.lax.scan(
+        chunk_body, st0,
+        (xc, Bh.swapaxes(0, 1), Ch.swapaxes(0, 1), dt.swapaxes(0, 1),
+         dA.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, L, nh, hd)
+    y = y + xh.reshape(B, L, nh, hd).astype(jnp.float32) \
+        * p["D"][None, None, :, None]
+    y = constrain(y.reshape(B, L, d_in).astype(u.dtype), "dp", None, "tp")
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], 1e-5)
+    if pad:
+        y = y[:, pad:]
+    out = constrain(y @ p["out_proj"], "dp", None, None)
+    if return_state:
+        return out, {"ssm": state, "conv": conv_out_state}
+    return out
+
+
+def mamba_decode_fwd(p: Params, u: jax.Array, ssm: SSMConfig, d: int,
+                     state: Dict[str, jax.Array]):
+    """Single-token SSM step. u: (B, 1, D); state: {ssm, conv}."""
+    B = u.shape[0]
+    z, xs, Bm, Cm, dt, d_in, nh, gn, conv_state = \
+        _ssd_proj(p, u, ssm, d, state["conv"])
+    hd, N, G = ssm.head_dim, ssm.d_state, ssm.n_groups
+    hpg = nh // G
+    xh = xs.reshape(B, nh, hd)
+    Bh = jnp.repeat(Bm.reshape(B, G, N), hpg, axis=1)         # (B,nh,N)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), hpg, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"]).reshape(B, nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A[None, :])                         # (B,nh)
+    st = state["ssm"] * decay[:, :, None, None] \
+        + jnp.einsum("bhp,bhn,bh->bhpn", xh.astype(jnp.float32), Bh, dtv)
+    y = jnp.einsum("bhpn,bhn->bhp", st, Ch) \
+        + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], 1e-5)
+    return y @ p["out_proj"], {"ssm": st, "conv": conv_state}

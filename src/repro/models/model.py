@@ -1,0 +1,405 @@
+"""Unified model zoo: one scan-friendly decoder covering all six families.
+
+Layers are stacked per *period position* and scanned over periods, so the
+HLO stays one-period-sized regardless of depth (compile-time critical at
+512 SPMD partitions):
+
+  family    period   position structure
+  dense      1       [attn + mlp]
+  moe(all)   1       [attn + moe]
+  moe(alt)   2       [attn + mlp, attn + moe]
+  ssm        1       [mamba]
+  hybrid     8       [attn|mamba at t==0|t>0; moe on odd t]   (jamba)
+  encdec     1       encoder [bidir attn + mlp], decoder
+                     [self attn + cross attn + mlp]           (whisper)
+  vlm        1       dense decoder + patch-embedding prefix   (internvl2)
+
+Entry points: init_params / train_logits_and_loss / prefill / decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# period structure
+# --------------------------------------------------------------------------
+
+def period_len(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.hybrid_period
+    if cfg.moe is not None and cfg.moe.layout == "alternate":
+        return 2
+    return 1
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    pl = period_len(cfg)
+    assert cfg.n_layers % pl == 0, (cfg.n_layers, pl)
+    return cfg.n_layers // pl
+
+
+def pos_is_attn(cfg: ModelConfig, t: int) -> bool:
+    return cfg.is_attention_layer(t)
+
+
+def pos_is_moe(cfg: ModelConfig, t: int) -> bool:
+    return cfg.is_moe_layer(t)
+
+
+def pos_has_ffn(cfg: ModelConfig, t: int) -> bool:
+    return cfg.family != "ssm"
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_position(key, cfg: ModelConfig, t: int) -> Params:
+    """Params for one layer at period-position t."""
+    ks = iter(jax.random.split(key, 8))
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.ones((d,), L.PDTYPE)}
+    if pos_is_attn(cfg, t):
+        p["attn"] = L.init_attention(next(ks), cfg)
+    else:
+        p["mamba"] = L.init_mamba(next(ks), d, cfg.ssm)
+    if cfg.family == "encdec":
+        p["ln_x"] = jnp.ones((d,), L.PDTYPE)
+        p["xattn"] = L.init_cross_attention(next(ks), cfg)
+    if pos_has_ffn(cfg, t):
+        p["ln2"] = jnp.ones((d,), L.PDTYPE)
+        if pos_is_moe(cfg, t):
+            p["moe"] = L.init_moe(next(ks), d, cfg.moe)
+        else:
+            p["mlp"] = L.init_mlp(next(ks), d, cfg.d_ff)
+    return p
+
+
+def _init_stacked(key, cfg: ModelConfig) -> Dict[str, Params]:
+    """{pos_t: params stacked over periods} — scan xs."""
+    np_, pl = n_periods(cfg), period_len(cfg)
+    out = {}
+    for t in range(pl):
+        keys = jax.random.split(jax.random.fold_in(key, t), np_)
+        out[str(t)] = jax.vmap(lambda k_: _init_position(k_, cfg, t))(keys)
+    return out
+
+
+def _init_encoder(key, cfg: ModelConfig) -> Params:
+    """Whisper-style encoder stack (bidirectional, sinusoidal pos)."""
+    enc_cfg = dataclasses.replace(cfg, attn_bias=False)
+    np_ = cfg.encoder.n_layers
+    keys = jax.random.split(key, np_)
+
+    def one(k_):
+        k1, k2 = jax.random.split(k_)
+        d = cfg.d_model
+        return {"ln1": jnp.ones((d,), L.PDTYPE),
+                "attn": L.init_attention(k1, enc_cfg),
+                "ln2": jnp.ones((d,), L.PDTYPE),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff)}
+
+    return jax.vmap(one)(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = iter(jax.random.split(key, 8))
+    d, v = cfg.d_model, cfg.vocab
+    p: Params = {
+        "embed": (jax.random.normal(next(ks), (v, d), jnp.float32)
+                  * d ** -0.5).astype(L.PDTYPE),
+        "blocks": _init_stacked(next(ks), cfg),
+        "ln_f": jnp.ones((d,), L.PDTYPE),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(next(ks), d, v)
+    if cfg.family == "encdec":
+        p["encoder"] = _init_encoder(next(ks), cfg)
+        if cfg.encoder.d_frontend != d:
+            p["enc_in"] = L.dense_init(next(ks), cfg.encoder.d_frontend, d)
+    return p
+
+
+# --------------------------------------------------------------------------
+# sinusoidal positions (whisper)
+# --------------------------------------------------------------------------
+
+def sinusoid(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, jnp.float32) * (-jnp.log(1e4) / d))
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(L.CDTYPE)
+
+
+# --------------------------------------------------------------------------
+# forward: full-sequence (train / prefill)
+# --------------------------------------------------------------------------
+
+def _layer_full(p: Params, x, cfg: ModelConfig, t: int, *, positions,
+                enc_out, want_cache: bool):
+    """One layer, full sequence. Returns (x, aux, cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    use_rope = cfg.family != "encdec"
+    if pos_is_attn(cfg, t):
+        h, (k_, v_) = L.attention_fwd(p["attn"], L.rms_norm(
+            x, p["ln1"], cfg.norm_eps), cfg, positions=positions,
+            causal=True, use_rope=use_rope)
+        x = x + h
+        if want_cache:
+            cache["kv"] = (k_, v_)
+    else:
+        h = L.mamba_fwd(p["mamba"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                        cfg.ssm, cfg.d_model,
+                        return_state=want_cache)
+        if want_cache:
+            h, st = h
+            cache["ssm"] = st
+        x = x + h
+    if cfg.family == "encdec":
+        x = x + L.cross_attention_fwd(
+            p["xattn"], L.rms_norm(x, p["ln_x"], cfg.norm_eps),
+            L.cross_kv(p["xattn"], enc_out, cfg), cfg)
+    if pos_has_ffn(cfg, t):
+        h_in = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if pos_is_moe(cfg, t):
+            h, a = L.moe_fwd(p["moe"], h_in, cfg.moe)
+            aux = aux + a
+        else:
+            h = L.mlp_fwd(p["mlp"], h_in)
+        x = x + h
+    return x, aux, cache
+
+
+def backbone_full(params: Params, x, cfg: ModelConfig, *, positions,
+                  enc_out=None, want_cache: bool = False,
+                  remat: bool = True):
+    """Scan the stacked blocks over a full sequence."""
+    pl = period_len(cfg)
+
+    def period_body(carry, pparams):
+        x, aux = carry
+        caches = {}
+        for t in range(pl):
+            x, a, c = _layer_full(pparams[str(t)], x, cfg, t,
+                                  positions=positions, enc_out=enc_out,
+                                  want_cache=want_cache)
+            x = L.constrain(x, "dp", None, None)
+            aux = aux + a
+            if c:
+                caches[str(t)] = c
+        return (x, aux), caches
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    params["blocks"])
+    return x, aux, caches
+
+
+def encode(params: Params, frames, cfg: ModelConfig):
+    """Whisper encoder: precomputed frame embeddings -> context."""
+    x = frames.astype(L.CDTYPE)
+    if "enc_in" in params:
+        x = x @ params["enc_in"]
+    x = x + sinusoid(x.shape[1], cfg.d_model)[None]
+
+    def body(x, p):
+        h, _ = L.attention_fwd(
+            p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+            positions=jnp.arange(x.shape[1])[None], causal=False,
+            use_rope=False)
+        x = x + h
+        x = x + L.mlp_fwd(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return x
+
+
+def embed_inputs(params: Params, batch: Dict[str, jax.Array],
+                 cfg: ModelConfig):
+    """tokens (+ modality prefix) -> (x, positions, enc_out)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(L.CDTYPE)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, batch["frames"], cfg)
+        x = x + sinusoid(x.shape[1], cfg.d_model)[None]
+    if cfg.family == "vlm":
+        # precomputed patch embeddings prefixed to the token sequence
+        x = jnp.concatenate([batch["patches"].astype(L.CDTYPE), x], axis=1)
+    S = x.shape[1]
+    x = L.constrain(x, "dp", None, None)
+    positions = jnp.arange(S)[None]
+    return x, positions, enc_out
+
+
+def logits_fn(params: Params, x, cfg: ModelConfig):
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return L.constrain((x @ w).astype(jnp.float32), "dp", None, "tp")
+
+
+def train_loss(params: Params, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, *, remat: bool = True):
+    """Token-mean cross entropy (+ MoE aux). labels==-100 masked out."""
+    x, positions, enc_out = embed_inputs(params, batch, cfg)
+    x, aux, _ = backbone_full(params, x, cfg, positions=positions,
+                              enc_out=enc_out, remat=remat)
+    if cfg.family == "vlm":   # strip the patch prefix before the LM loss
+        x = x[:, batch["patches"].shape[1]:]
+    logits = logits_fn(params, x, cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, cache_len: int):
+    """Run the prompt, return (last-token logits, decode cache).
+
+    Attention K/V caches are allocated at ``cache_len`` and filled with the
+    prompt prefix; SSM layers keep their (state, conv) carry.
+    """
+    x, positions, enc_out = embed_inputs(params, batch, cfg)
+    B, S = x.shape[0], x.shape[1]
+    x, _, caches = backbone_full(params, x, cfg, positions=positions,
+                                 enc_out=enc_out, want_cache=True,
+                                 remat=False)
+    logits = logits_fn(params, x[:, -1:], cfg)
+
+    out: Dict[str, Any] = {"pos": jnp.asarray(S, jnp.int32)}
+    blocks = {}
+    for t, c in caches.items():
+        ent = {}
+        if "kv" in c:
+            k_, v_ = c["kv"]   # (n_periods, B, S, KV, Dh)
+            pad = cache_len - S
+            ent["k"] = jnp.pad(k_, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                    (0, 0)))
+            ent["v"] = jnp.pad(v_, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                    (0, 0)))
+        if "ssm" in c:
+            ent["ssm"] = c["ssm"]["ssm"]
+            ent["conv"] = c["ssm"]["conv"]
+        blocks[t] = ent
+    out["blocks"] = blocks
+    if cfg.family == "encdec":
+        out["enc_out"] = enc_out
+    return logits, out
+
+
+def make_decode_cache(cfg: ModelConfig, *, batch: int, cache_len: int,
+                      dtype=L.CDTYPE) -> Dict[str, Any]:
+    """Zero-initialised cache pytree (used for dry-run input specs)."""
+    np_, pl = n_periods(cfg), period_len(cfg)
+    blocks = {}
+    for t in range(pl):
+        ent: Dict[str, Any] = {}
+        if pos_is_attn(cfg, t):
+            shp = (np_, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+            ent["k"] = jnp.zeros(shp, dtype)
+            ent["v"] = jnp.zeros(shp, dtype)
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            gn = s.n_groups * s.d_state
+            ent["ssm"] = jnp.zeros((np_, batch, nh, s.head_dim, s.d_state),
+                                   jnp.float32)
+            ent["conv"] = {
+                "x": jnp.zeros((np_, batch, s.d_conv - 1, d_in), dtype),
+                "bc": jnp.zeros((np_, batch, s.d_conv - 1, 2 * gn), dtype)}
+        blocks[str(t)] = ent
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32),
+                             "blocks": blocks}
+    if cfg.family == "encdec":
+        cache["enc_out"] = jnp.zeros((batch, cfg.encoder.n_ctx,
+                                      cfg.d_model), dtype)
+    return cache
+
+
+def decode_step(params: Params, token: jax.Array, cache: Dict[str, Any],
+                cfg: ModelConfig):
+    """One decode step. token: (B, 1) int32. Returns (logits, new cache)."""
+    x = params["embed"][token].astype(L.CDTYPE)
+    pos = cache["pos"]
+    if cfg.family == "encdec":
+        x = x + sinusoid_at(pos, cfg.d_model)[None, None]
+    enc_out = cache.get("enc_out")
+    pl = period_len(cfg)
+
+    def period_body(x, inp):
+        pparams, pcache = inp
+        new_cache = {}
+        for t in range(pl):
+            p = pparams[str(t)]
+            ent = pcache[str(t)]
+            h_in = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            if pos_is_attn(cfg, t):
+                h, (k_, v_) = L.attention_decode_fwd(
+                    p["attn"], h_in, cfg, k_cache=ent["k"],
+                    v_cache=ent["v"], pos=pos,
+                    use_rope=cfg.family != "encdec")
+                new_cache[str(t)] = {"k": k_, "v": v_}
+            else:
+                h, st = L.mamba_decode_fwd(
+                    p["mamba"], h_in, cfg.ssm, cfg.d_model,
+                    {"ssm": ent["ssm"], "conv": ent["conv"]})
+                new_cache[str(t)] = {"ssm": st["ssm"], "conv": st["conv"]}
+            x = x + h
+            if cfg.family == "encdec":
+                x = x + L.cross_attention_fwd(
+                    p["xattn"], L.rms_norm(x, p["ln_x"], cfg.norm_eps),
+                    L.cross_kv(p["xattn"], enc_out, cfg), cfg)
+            if pos_has_ffn(cfg, t):
+                h_in2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+                if pos_is_moe(cfg, t):
+                    h, _ = L.moe_fwd(p["moe"], h_in2, cfg.moe)
+                else:
+                    h = L.mlp_fwd(p["mlp"], h_in2)
+                x = x + h
+        return x, new_cache
+
+    x, new_blocks = jax.lax.scan(period_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    logits = logits_fn(params, x, cfg)
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    div = jnp.exp(jnp.arange(0, d, 2, jnp.float32) * (-jnp.log(1e4) / d))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe.astype(L.CDTYPE)

@@ -1,0 +1,212 @@
+"""GSPMD sharding rules for params, activations, caches and batches.
+
+Baseline layout (MaxText-style TP + FSDP):
+  * batch / tokens          -> data axes ("pod", "data")
+  * attention heads, FFN hidden, experts, vocab -> "model" (TP / EP)
+  * the non-TP dim of every weight additionally shards over "data" (FSDP,
+    ZeRO-3 storage; XLA all-gathers per layer inside the scan)
+  * per-arch fallback: archs whose head/expert counts don't divide the
+    model axis (whisper-tiny: 6 heads) keep those weights TP-replicated —
+    recorded by `tp_ok()`.
+
+KV caches: batch -> data axes when divisible; KV heads -> "model" when
+divisible, otherwise the SEQUENCE dim -> "model" (decode_attention is
+written as reductions over S, so a sequence-sharded cache lowers to
+flash-decoding partial-softmax all-reduces).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+TP = "model"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != TP)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def tp_ok(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Can attention heads shard over the model axis for this arch?"""
+    return cfg.n_heads % mesh.shape[TP] == 0
+
+
+def kv_tp_ok(cfg: ModelConfig, mesh: Mesh) -> bool:
+    return cfg.n_kv_heads % mesh.shape[TP] == 0
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+def _leaf_rule(path: str, ndim: int, cfg: ModelConfig, mesh: Mesh,
+               fsdp: str) -> P:
+    """PartitionSpec for one param leaf. ``path`` is dot-joined key names.
+
+    Stacked block params carry a leading period axis (never sharded) —
+    handled by padding the rule with a leading None when ndim exceeds the
+    base rank.
+    """
+    name = path.split(".")[-1]
+    in_attn = ".attn." in path or path.endswith("attn") or ".xattn." in path
+    attn_tp = TP if tp_ok(cfg, mesh) else None
+
+    if name == "embed":
+        return P(TP, None)                       # vocab-sharded rows
+    if name == "lm_head":
+        return P(fsdp, TP)
+    if name == "enc_in":
+        return P(None, fsdp)
+
+    def stacked(*spec):
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    if name in ("wq", "wk", "wv"):
+        if in_attn:
+            return stacked(fsdp, attn_tp)
+        return stacked(fsdp, TP)                 # unreachable, safety
+    if name == "wo":
+        return stacked(attn_tp, fsdp)
+    if name in ("bq", "bk", "bv"):
+        return stacked(attn_tp)
+    if name in ("w_gate", "w_up"):
+        if ndim >= 3 and ".moe." in path:        # (L, E, D, F)
+            return stacked(TP, fsdp, None)
+        return stacked(fsdp, TP)
+    if name == "w_down":
+        if ndim >= 3 and ".moe." in path:        # (L, E, F, D)
+            return stacked(TP, fsdp, None)
+        return stacked(TP, fsdp)
+    if name == "router":
+        return stacked(fsdp, None)
+    # mamba
+    if name in ("wz", "wx"):
+        return stacked(fsdp, TP)                 # d_inner over TP (heads)
+    if name == "wdt":
+        return stacked(fsdp, TP)                 # heads over TP
+    if name in ("wB", "wC"):
+        return stacked(fsdp, None)               # small shared groups
+    if name == "conv_x":
+        return stacked(None, TP)
+    if name == "conv_bc":
+        return stacked(None, None)
+    if name in ("A_log", "D", "dt_bias"):
+        return stacked(TP)
+    if name == "norm":
+        return stacked(TP)                       # (d_inner,) TP-sharded
+    if name == "out_proj":
+        return stacked(TP, fsdp)
+    # norms / anything small: replicated
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    out = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            out.append(str(e.key))
+        else:
+            out.append(str(e))
+    return ".".join(out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """PartitionSpec pytree for a params tree (arrays OR ShapeDtypeStructs).
+
+    FSDP dim uses "data" (per-pod ZeRO-3); params stay replicated across
+    "pod" so the cross-DCI traffic per step is one gradient all-reduce.
+    """
+    fsdp = "data" if "data" in mesh.axis_names else None
+
+    def rule(path, leaf):
+        spec = _leaf_rule(_path_str(path), leaf.ndim, cfg, mesh, fsdp)
+        # divisibility guard: drop axes that don't divide
+        fixed = []
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = axis_size(mesh, ax)
+            fixed.append(ax if leaf.shape[dim] % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params_shape))
+
+
+# --------------------------------------------------------------------------
+# batch / activation / cache rules
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_shape) -> Any:
+    dp = data_axes(mesh)
+
+    def rule(path, leaf):
+        name = _path_str(path).split(".")[-1]
+        bdim = leaf.shape[0]
+        b_ax = dp if bdim % axis_size(mesh, dp) == 0 else None
+        if name in ("tokens", "labels"):
+            return P(b_ax, None)
+        if name in ("frames", "patches"):
+            return P(b_ax, None, None)
+        return P(*([b_ax] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape) -> Any:
+    dp = data_axes(mesh)
+    dp_total = axis_size(mesh, dp)
+    kv_on_tp = kv_tp_ok(cfg, mesh)
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        name = pstr.split(".")[-1]
+        if name == "pos":
+            return P()
+        if name == "enc_out":                    # (B, ctx, D)
+            b_ax = dp if leaf.shape[0] % dp_total == 0 else None
+            return P(b_ax, None, None)
+        if name in ("k", "v"):                   # (L, B, S, KV, Dh)
+            b_ax = dp if leaf.shape[1] % dp_total == 0 else None
+            if kv_on_tp:
+                return P(None, b_ax, None, TP, None)
+            return P(None, b_ax, TP, None, None)   # sequence-sharded
+        if name == "ssm":                        # (L, B, nh, hd, N)
+            b_ax = dp if leaf.shape[1] % dp_total == 0 else None
+            nh_ax = TP if leaf.shape[2] % mesh.shape[TP] == 0 else None
+            return P(None, b_ax, nh_ax, None, None)
+        if name in ("x", "bc"):                  # conv state (L,B,w,C)
+            b_ax = dp if leaf.shape[1] % dp_total == 0 else None
+            c_ax = TP if (name == "x"
+                          and leaf.shape[3] % mesh.shape[TP] == 0) else None
+            return P(None, b_ax, None, c_ax)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def tree_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_spec(mesh: Mesh, cfg: ModelConfig) -> P:
+    """(B, S, D) residual-stream constraint."""
+    return P(data_axes(mesh), None, None)

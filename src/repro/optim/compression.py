@@ -1,0 +1,64 @@
+"""int8 gradient compression with error feedback (cross-pod all-reduce).
+
+At 512+ chips the cross-pod (DCI) gradient all-reduce is the slowest
+collective; quantising to int8 with per-tensor scales cuts its volume 4x
+(f32 accumulate) / 2x (bf16). Error feedback keeps the quantisation noise
+unbiased over steps: the residual e_t is added back before the next
+quantisation, so the *sum* of transmitted grads converges to the true sum
+(Karimireddy et al., 2019).
+
+Usage inside a shard_map'ed train step over the "pod" axis:
+
+    q, scale, new_err = encode(g + err)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), "pod")
+    g_hat = decode(q_sum, jax.lax.pmax(scale, "pod"))
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def encode(g: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(int8 quantised, per-tensor scale, error-feedback residual)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0
+    safe = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(gf / safe), -127, 127).astype(jnp.int8)
+    err = gf - q.astype(jnp.float32) * safe
+    return q, scale, err
+
+
+def decode(q_sum: jax.Array, scale: jax.Array) -> jax.Array:
+    return q_sum.astype(jnp.float32) * jnp.maximum(scale, 1e-30)
+
+
+def compressed_psum(tree: Any, err_tree: Any, axis: str):
+    """Error-feedback int8 psum of a grad pytree over ``axis``.
+
+    Returns (psum'ed f32 grads, new error-feedback tree). Scales use the
+    axis-max so all shards decode identically.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        # shared scale (pmax: one scalar per tensor on the wire) so every
+        # shard decodes the identical sum
+        s = jax.lax.pmax(jnp.max(jnp.abs(gf)) / 127.0, axis)
+        safe = jnp.maximum(s, 1e-30)
+        q = jnp.clip(jnp.round(gf / safe), -127, 127)
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis)
+        err = gf - q * safe
+        return decode(q_sum, s), err
+
+    out = jax.tree.map(one, tree, err_tree)
+    g_new = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    e_new = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return g_new, e_new
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,422 @@
+"""Loop-aware FLOP/byte counting over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY ONCE — with
+scan-over-layers and scan-over-microbatches that undercounts by orders of
+magnitude. This module re-derives per-device costs from the HLO text:
+
+  * dot FLOPs = 2 * prod(output dims) * prod(lhs contracting dims),
+  * fusion/dot HBM bytes = operand bytes + output bytes (fusions are
+    XLA's unit of memory traffic),
+  * while loops multiply their body cost by the trip count (parsed from
+    the largest integer constant in the loop's condition computation —
+    exact for jax.lax.scan/fori loops, which compare the induction
+    variable against a literal),
+  * fusions / calls / conditionals recurse through the call graph,
+  * collective wire bytes likewise accumulate through loops (a psum
+    inside a scan crosses the wire every iteration).
+
+Results are per-device because post-partitioning shapes are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# header: ``%name (args...) -> type {`` — args may contain nested parens
+# (tuple-typed params), so only anchor on the leading %name(.
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+# first ``word(`` after the `=` is the op mnemonic (tuple types carry
+# ``/*index=N*/`` comments, so don't try to span the type with a class)
+_OP_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_CALL_ATTRS = ("calls=", "to_apply=", "body=", "condition=",
+               "branch_computations=")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",") if x]
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), _dims(m.group(2))
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class OpCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    wire_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "OpCost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.wire += o.wire
+        for k, v in o.wire_by_kind.items():
+            self.wire_by_kind[k] = self.wire_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, t: float) -> "OpCost":
+        return OpCost(self.flops * t, self.bytes * t, self.wire * t,
+                      {k: v * t for k, v in self.wire_by_kind.items()})
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    body: List[str] = []
+    for line in text.splitlines():
+        ls = line.strip()
+        if cur is None:
+            if ls.endswith("{"):
+                m = _COMP_HDR.match(ls)
+                if m:
+                    cur = m.group(1)
+                    body = []
+        else:
+            if ls == "}" or ls.startswith("}"):
+                comps[cur] = body
+                cur = None
+            else:
+                body.append(ls)
+    return comps
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_ARGS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _line_def(line: str):
+    """(name, type_str, rest) for a ``%name = type op(...)`` line."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    return m.group(1), m.group(2)
+
+
+def _operand_names(rest: str, op: str):
+    """Names passed to op(...): optimized HLO prints names, not types."""
+    i = rest.find(op + "(")
+    if i < 0:
+        return []
+    depth = 0
+    j = i + len(op)
+    for j in range(i + len(op), len(rest)):
+        ch = rest[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = rest[i + len(op) + 1: j]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _dot_flops(line: str, table: Dict[str, Tuple[str, List[int]]]) -> float:
+    shapes = list(_SHAPE_RE.finditer(line))
+    if not shapes:
+        return 0.0
+    out_n = 1
+    for d in _dims(shapes[0].group(2)):
+        out_n *= d
+    c = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    ops = _operand_names(line, "dot")
+    if m and ops and ops[0] in table:
+        lhs_dims = table[ops[0]][1]
+        for i in _dims(m.group(1)):
+            if i < len(lhs_dims):
+                c *= lhs_dims[i]
+    return 2.0 * out_n * c
+
+
+def _line_callees(line: str) -> List[str]:
+    out = []
+    for attr in _CALL_ATTRS:
+        for m in re.finditer(re.escape(attr) + r"\{?%?([\w.\-]+)", line):
+            name = m.group(1).rstrip(",}")
+            out.append(name)
+        # branch_computations={%a, %b}
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        out.extend(x.strip().lstrip("%") for x in m.group(1).split(","))
+    return out
+
+
+def _trip_count(cond_body: List[str]) -> float:
+    """Largest integer literal in the loop condition — exact for scans.
+
+    jax.lax.scan / fori_loop conditions are ``compare(iter, constant(N)),
+    direction=LT``. Capped to guard against sentinel constants.
+    """
+    best = 1
+    for line in cond_body:
+        if "constant(" not in line:
+            continue
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            v = int(m.group(1))
+            if v < 10_000_000:
+                best = max(best, v)
+    return float(best)
+
+
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+_BYTES_OPS = frozenset((
+    "copy", "copy-start", "transpose", "reshape", "broadcast",
+    "concatenate", "slice", "dynamic-slice", "dynamic-update-slice",
+    "reduce", "sort", "scatter", "gather", "pad", "convert",
+    "select-and-scatter", "reduce-window", "add", "multiply", "subtract",
+    "divide", "select", "exponential", "rsqrt", "tanh", "maximum",
+    "minimum", "compare", "dot", "fusion"))
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps = _split_computations(hlo_text)
+        self._memo: Dict[str, OpCost] = {}
+        self._tables: Dict[str, Dict[str, Tuple[str, List[int]]]] = {}
+        entry = None
+        for line in hlo_text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    entry = m.group(1)
+        self.entry = entry
+
+    def _table(self, name: str) -> Dict[str, Tuple[str, List[int]]]:
+        """name -> (dtype, dims) symbol table for one computation."""
+        if name in self._tables:
+            return self._tables[name]
+        table: Dict[str, Tuple[str, List[int]]] = {}
+        for line in self.comps.get(name, ()):
+            d = _line_def(line)
+            if not d:
+                continue
+            var, rest = d
+            tm = _SHAPE_RE.match(rest)
+            if tm:
+                table[var] = (tm.group(1), _dims(tm.group(2)))
+        self._tables[name] = table
+        return table
+
+    def _operand_bytes(self, rest: str, op: str, table) -> float:
+        tot = 0.0
+        for nm in _operand_names(rest, op):
+            if nm in table:
+                dt, dims = table[nm]
+                n = 1
+                for d in dims:
+                    n *= d
+                tot += n * _DTYPE_BYTES.get(dt, 0)
+        return tot
+
+    def _fusion_traffic(self, callee: str) -> float:
+        """HBM traffic of one fusion execution, from its computation body.
+
+        Parameters consumed ONLY through dynamic-slice/gather inside the
+        fusion contribute the SLICE size, not the full buffer (scan stacks
+        are read one layer at a time). A dynamic-update-slice root writes
+        its update slice in place, not the whole aliased buffer.
+        """
+        key = f"traffic|{callee}"
+        if key in self._memo:
+            return self._memo[key].bytes
+        body = self.comps.get(callee, ())
+        table = self._table(callee)
+        params: Dict[str, float] = {}
+        alias: Dict[str, str] = {}           # view var -> root param
+        view_src: Dict[str, str] = {}        # view var -> source var
+        dus_update: Dict[str, float] = {}    # DUS var -> update bytes
+        sliced_reads: Dict[str, float] = {}
+        used_whole: Dict[str, bool] = {}
+        root_bytes = 0.0
+        _VIEW = ("bitcast", "reshape", "copy", "transpose", "convert")
+
+        def _root_of(nm: str):
+            return alias.get(nm, nm)
+
+        def _producer(nm: str):
+            seen = set()
+            while nm in view_src and nm not in seen:
+                seen.add(nm)
+                nm = view_src[nm]
+            return nm
+
+        for line in body:
+            d = _line_def(line)
+            if not d:
+                continue
+            var, rest = d
+            m = _OP_RE.search(rest)
+            op = m.group(1) if m else ""
+            if op == "parameter":
+                tm = _SHAPE_RE.match(rest)
+                if tm:
+                    n = 1
+                    for x in _dims(tm.group(2)):
+                        n *= x
+                    params[var] = n * _DTYPE_BYTES.get(tm.group(1), 0)
+                    used_whole[var] = False
+                    sliced_reads[var] = 0.0
+                continue
+            names = _operand_names(rest, op) if op else []
+            out_b = 0.0
+            tm = _SHAPE_RE.match(rest)
+            if tm:
+                n = 1
+                for x in _dims(tm.group(2)):
+                    n *= x
+                out_b = n * _DTYPE_BYTES.get(tm.group(1), 0)
+            # convert/copy count as views here: on CPU, XLA legalizes
+            # bf16 through f32 reduce-precision roundtrips over WHOLE
+            # buffers — artifacts that don't exist on the TPU target.
+            if op in ("bitcast", "reshape", "transpose", "convert",
+                      "copy", "reduce-precision") and len(names) == 1:
+                view_src[var] = names[0]
+                if _root_of(names[0]) in params:
+                    alias[var] = _root_of(names[0])
+                    continue
+            if op == "dynamic-update-slice" and len(names) >= 2:
+                upd = names[1]
+                if upd in table:
+                    dt, dims = table[upd]
+                    n = 1
+                    for x in dims:
+                        n *= x
+                    dus_update[var] = n * _DTYPE_BYTES.get(dt, 0)
+                else:
+                    dus_update[var] = out_b
+            for i, nm in enumerate(names):
+                p = _root_of(nm)
+                if p not in params:
+                    continue
+                if op in ("dynamic-slice", "gather", "slice"):
+                    sliced_reads[p] += out_b
+                elif op == "dynamic-update-slice" and i == 0:
+                    pass          # aliased in-place destination
+                else:
+                    used_whole[p] = True
+            if line.lstrip().startswith("ROOT"):
+                prod = _producer(var)
+                if op == "dynamic-update-slice":
+                    root_bytes = dus_update.get(var, out_b)
+                elif prod in dus_update:
+                    root_bytes = dus_update[prod]
+                else:
+                    root_bytes = out_b
+        reads = sum(params[p] if used_whole[p] else
+                    min(params[p], sliced_reads[p])
+                    for p in params)
+        total = reads + root_bytes
+        self._memo[key] = OpCost(bytes=total)
+        return total
+
+    def cost(self) -> OpCost:
+        if self.entry is None:
+            return OpCost()
+        return self.comp_cost(self.entry, in_fusion=False)
+
+    def comp_cost(self, name: str, *, in_fusion: bool) -> OpCost:
+        key = f"{name}|{in_fusion}"
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = OpCost()           # cycle guard
+        total = OpCost()
+        table = self._table(name)
+        for line in self.comps.get(name, ()):
+            total += self.line_cost(line, table, in_fusion=in_fusion)
+        self._memo[key] = total
+        return total
+
+    def line_cost(self, line: str, table, *, in_fusion: bool) -> OpCost:
+        if " = " not in line:
+            return OpCost()
+        rest = line.split(" = ", 1)[1]
+        m = _OP_RE.search(rest)
+        if not m:
+            return OpCost()
+        op = m.group(1)
+        c = OpCost()
+        if op == "dot":
+            c.flops += _dot_flops(line, table)
+        elif op == "fusion":
+            # fusion internals never touch HBM: recurse for FLOPs only;
+            # boundary traffic is slice-aware (see _fusion_traffic)
+            for cal in _line_callees(line):
+                c += self.comp_cost(cal, in_fusion=True)
+                if not in_fusion:
+                    c.bytes += self._fusion_traffic(cal)
+            return c
+        elif op == "while":
+            body = cond = None
+            for attr, val in re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                        line):
+                if attr == "body":
+                    body = val.rstrip(",")
+                else:
+                    cond = val.rstrip(",")
+            # XLA annotates resolved trip counts in backend_config —
+            # exact; fall back to the condition-constant heuristic.
+            mt = _TRIP_CFG.search(line)
+            if mt:
+                trips = float(mt.group(1))
+            else:
+                trips = _trip_count(self.comps.get(cond, [])) if cond \
+                    else 1.0
+            if body:
+                c += self.comp_cost(body, in_fusion=False).scaled(trips)
+            return c
+        elif op in ("call", "conditional", "async-start"):
+            for cal in _line_callees(line):
+                c += self.comp_cost(cal, in_fusion=in_fusion)
+            return c
+        elif op.removesuffix("-start") in _COLLECTIVES \
+                and not op.endswith("-done"):
+            base = op.removesuffix("-start")
+            out_b = [_shape_bytes(s) for s in _SHAPE_RE.finditer(rest)]
+            in_b = self._operand_bytes(rest, op, table)
+            full = max(max(out_b, default=0.0), in_b)
+            if full:
+                wire = 2.0 * full if base == "all-reduce" else full
+                c.wire += wire
+                c.wire_by_kind[base] = c.wire_by_kind.get(base, 0.0) + wire
+                if not in_fusion:
+                    c.bytes += full
+            return c
+        elif op == "convolution":
+            shapes = list(_SHAPE_RE.finditer(rest))
+            if shapes:
+                out_n = 1
+                for d in _dims(shapes[0].group(2)):
+                    out_n *= d
+                c.flops += 2.0 * out_n  # lower bound (kernel dims unknown)
+        # memory traffic: outputs (on the line) + operands (symbol table)
+        if not in_fusion and op in _BYTES_OPS:
+            c.bytes += sum(_shape_bytes(s) for s in _SHAPE_RE.finditer(rest))
+            c.bytes += self._operand_bytes(rest, op, table)
+        return c
+
+
+def analyze(hlo_text: str) -> OpCost:
+    return HloCostModel(hlo_text).cost()

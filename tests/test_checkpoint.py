@@ -1,0 +1,101 @@
+"""Checkpoint store: roundtrip, atomicity, GC, checksums, elasticity."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+
+
+def tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+            "nested": {"b": jnp.asarray(rng.normal(size=(4,)),
+                                        jnp.bfloat16),
+                       "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    t = tree()
+    store.save(3, t)
+    got = store.restore(jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_n_gc(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, tree(s))
+    assert store.steps() == [3, 4]
+
+
+def test_background_save_then_restore(tmp_path):
+    store = CheckpointStore(tmp_path, keep=3)
+    t = tree(5)
+    store.save(10, t, background=True)
+    store.wait()
+    assert store.latest_step() == 10
+    got = store.restore(jax.tree.map(jnp.zeros_like, t))
+    np.testing.assert_array_equal(np.asarray(t["w"]),
+                                  np.asarray(got["w"]))
+
+
+def test_checksum_detects_corruption(tmp_path):
+    store = CheckpointStore(tmp_path)
+    t = tree()
+    store.save(1, t)
+    d = tmp_path / "step_000000001"
+    # corrupt one leaf
+    target = next(d.glob("arr_*.npy"))
+    arr = np.load(target)
+    arr = np.asarray(arr).copy()
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[0] ^= 0xFF
+    np.save(target, arr)
+    with pytest.raises(IOError):
+        store.restore(jax.tree.map(jnp.zeros_like, t))
+
+
+def test_crashed_tmp_dir_is_ignored(tmp_path):
+    store = CheckpointStore(tmp_path)
+    t = tree()
+    store.save(1, t)
+    # simulate a crashed writer
+    fake = tmp_path / "step_000000002.tmp-9999"
+    fake.mkdir()
+    (fake / "garbage").write_text("x")
+    assert store.latest_step() == 1
+    store.restore(jax.tree.map(jnp.zeros_like, t))
+
+
+def test_missing_leaf_raises(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(1, {"a": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        store.restore({"a": jnp.zeros((2,)), "b": jnp.zeros((3,))})
+
+
+def test_kmeans_growth_state_roundtrip(tmp_path):
+    """The engine's full state (incl. growth schedule) is restorable —
+    elastic restart of a nested run."""
+    from repro.core.state import init_state
+    import dataclasses
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(64, 8)),
+                    jnp.float32)
+    s = init_state(X, 4, bounds="hamerly2")
+    meta = {"b": jnp.asarray(16), "b0": jnp.asarray(8),
+            "seed": jnp.asarray(0)}
+    store = CheckpointStore(tmp_path)
+    store.save(0, {"state": s, "meta": meta})
+    got = store.restore({"state": init_state(X, 4, bounds="hamerly2"),
+                         "meta": jax.tree.map(jnp.zeros_like, meta)})
+    assert int(got["meta"]["b"]) == 16
+    np.testing.assert_array_equal(np.asarray(s.stats.C),
+                                  np.asarray(got["state"].stats.C))

@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles, interpret=True shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.cluster_sum import cluster_sum_pallas
+from repro.kernels.kmeans_assign import assign_top2_pallas
+
+SHAPES = [
+    (64, 7, 5),          # tiny, heavy padding
+    (256, 32, 50),       # paper k
+    (300, 784, 50),      # infMNIST dims, unaligned n
+    (512, 128, 128),     # aligned everything
+    (1000, 200, 257),    # k crosses one block boundary
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_assign_top2_matches_ref(n, d, k, dtype):
+    rng = np.random.default_rng(n + d + k)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(k, d)) * 2, dtype)
+    a_p, d1_p, d2_p = assign_top2_pallas(x, c, bn=128, bk=128,
+                                         interpret=True)
+    a_r, d1_r, d2_r = ref.assign_top2_ref(x, c)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(d1_p, d1_r, rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(d2_p, d2_r, rtol=tol, atol=tol * 10)
+    # assignments may differ only where d1 ties within tolerance
+    diff = np.asarray(a_p) != np.asarray(a_r)
+    if diff.any():
+        d2m = ref.pairwise_dist2(x, c)
+        for i in np.where(diff)[0]:
+            assert abs(d2m[i, a_p[i]] - d2m[i, a_r[i]]) < tol * 100
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+def test_cluster_sum_matches_ref(n, d, k):
+    rng = np.random.default_rng(n * 7 + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    a = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    w = jnp.asarray(rng.choice([-1.0, 0.0, 1.0], n), jnp.float32)
+    kp = k + (-k % 128)
+    s_p, v_p = cluster_sum_pallas(x, a, kp, weights=w, bn=128, bd=128,
+                                  interpret=True)
+    s_r, v_r = ref.cluster_sum_ref(x, a, k, weights=w)
+    np.testing.assert_allclose(s_p[:k], s_r, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(v_p[:k], v_r, rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(s_p[k:]) == 0)
+
+
+def test_assign_top2_second_distance_is_true_second():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(128, 16)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(9, 16)), jnp.float32)
+    _, d1, d2 = assign_top2_pallas(x, c, bn=128, bk=128, interpret=True)
+    d2m = np.sort(np.asarray(ref.pairwise_dist2(x, c)), axis=1)
+    np.testing.assert_allclose(d1, d2m[:, 0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(d2, d2m[:, 1], rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrappers_roundtrip():
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(200, 33)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(7, 33)), jnp.float32)
+    for backend in ("ref", "pallas"):
+        a, d1, d2 = ops.assign_top2(x, c, backend=backend)
+        s, v = ops.cluster_sum(x, a, 7, backend=backend)
+        assert a.shape == (200,) and s.shape == (7, 33) and v.shape == (7,)
+        np.testing.assert_allclose(
+            np.asarray(v).sum(), 200.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,d,k", [(100, 16, 5), (256, 64, 32),
+                                   (300, 48, 7)])
+def test_fused_round_matches_ref(n, d, k):
+    from repro.kernels.fused_round import fused_round_pallas, fused_round_ref
+    rng = np.random.default_rng(n + k)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)) * 2, jnp.float32)
+    a_p, d1_p, d2_p, S_p, v_p, sse_p = fused_round_pallas(
+        x, c, bn=128, interpret=True)
+    a_r, d1_r, d2_r, S_r, v_r, sse_r = fused_round_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(a_p), np.asarray(a_r))
+    np.testing.assert_allclose(d1_p, d1_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(d2_p, d2_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(S_p, S_r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(v_p, v_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(sse_p, sse_r, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,211 @@
+"""Faithfulness tests: every algorithm vs serial/numpy oracles.
+
+The paper's central exactness claims:
+  * bound tests never change assignments (tb == gb round-for-round);
+  * mb's S/v form (Alg. 8) == the serial running-mean form (Alg. 1);
+  * mb-f centroids are the exact mean of CURRENT assignments;
+  * gb-inf with b0=N reproduces Lloyd's algorithm.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import driver, rounds
+from repro.core.state import init_state, full_mse
+
+
+def _fit(X, k, **kw):
+    return driver.fit(X, k, X_val=None, max_rounds=kw.pop("max_rounds", 40),
+                      **kw)
+
+
+# ---------------------------------------------------------------------------
+# bounding is exact: tb (either bound type) == gb assignments every round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bounds", ["hamerly2", "elkan"])
+def test_bounds_never_change_assignments(blobs, bounds):
+    X, _ = blobs
+    k, b = 8, 512
+    Xd = jnp.asarray(X)
+    s_ref = init_state(Xd, k, bounds="none")
+    s_tb = init_state(Xd, k, bounds=bounds)
+    for r in range(12):
+        s_ref, _ = rounds.nested_round(Xd, s_ref, b=b, rho=np.inf,
+                                       bounds="none")
+        s_tb, info = rounds.nested_round(Xd, s_tb, b=b, rho=np.inf,
+                                         bounds=bounds)
+        np.testing.assert_array_equal(np.asarray(s_ref.points.a[:b]),
+                                      np.asarray(s_tb.points.a[:b]),
+                                      err_msg=f"round {r}")
+        np.testing.assert_allclose(np.asarray(s_ref.stats.C),
+                                   np.asarray(s_tb.stats.C),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_capacity_compaction_is_exact(blobs):
+    """Pruned rounds with a small capacity == dense rounds (after the
+    driver's overflow retry)."""
+    X, _ = blobs
+    k, b = 8, 1024
+    Xd = jnp.asarray(X)
+    s_a = init_state(Xd, k, bounds="none")
+    s_b = init_state(Xd, k, bounds="hamerly2")
+    cap = None
+    for r in range(10):
+        s_a, _ = rounds.nested_round(Xd, s_a, b=b, rho=np.inf,
+                                     bounds="none")
+        while True:
+            s_b2, info = rounds.nested_round(Xd, s_b, b=b, rho=np.inf,
+                                             bounds="hamerly2",
+                                             capacity=cap)
+            if not bool(info.overflow):
+                break
+            cap = None if cap is None or 2 * cap >= b else 2 * cap
+        s_b = s_b2
+        cap = 256   # deliberately small -> exercises retry next round
+        np.testing.assert_array_equal(np.asarray(s_a.points.a[:b]),
+                                      np.asarray(s_b.points.a[:b]))
+
+
+# ---------------------------------------------------------------------------
+# mb: S/v vectorised form == serial Alg. 1 oracle
+# ---------------------------------------------------------------------------
+
+def _serial_mb_round(X, idx, C, v):
+    """Sculley's Algorithm 1, straight from the paper, in numpy."""
+    C = C.copy()
+    v = v.copy()
+    a = {}
+    for i in idx:                       # assignment step (C frozen)
+        d = ((X[i] - C) ** 2).sum(1)
+        a[i] = int(np.argmin(d))
+    for i in idx:                       # update step (running mean)
+        j = a[i]
+        v[j] += 1
+        eta = 1.0 / v[j]
+        C[j] = (1 - eta) * C[j] + eta * X[i]
+    return C, v
+
+
+def test_mb_matches_serial_oracle(blobs):
+    X, _ = blobs
+    X = X[:600]
+    k, b = 8, 100
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(X))
+    Xs = X[perm]
+    Xd = jnp.asarray(Xs)
+
+    state = init_state(Xd, k, bounds="none")
+    C_np = np.asarray(state.stats.C).copy()
+    v_np = np.zeros(k)
+    order = rng.permutation(len(X))
+    for r in range(4):
+        idx = order[r * b:(r + 1) * b]
+        state, _ = rounds.mb_round(Xd, jnp.asarray(idx), state, fixed=False)
+        C_np, v_np = _serial_mb_round(Xs, idx, C_np, v_np)
+        np.testing.assert_allclose(np.asarray(state.stats.C), C_np,
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"round {r}")
+
+
+def test_mbf_centroids_are_exact_current_means(blobs):
+    """After any number of mb-f rounds: C(j) == mean of x(i) whose most
+    recent assignment is j (the paper's contamination-removal claim)."""
+    X, _ = blobs
+    X = X[:1000]
+    k, b = 8, 200
+    Xd = jnp.asarray(X)
+    state = init_state(Xd, k, bounds="none")
+    rng = np.random.default_rng(1)
+    for r in range(8):
+        idx = rng.permutation(len(X))[:b]
+        state, _ = rounds.mb_round(Xd, jnp.asarray(idx), state, fixed=True)
+    a = np.asarray(state.points.a)
+    C = np.asarray(state.stats.C)
+    for j in range(k):
+        members = X[a == j]
+        if len(members):
+            np.testing.assert_allclose(C[j], members.mean(0), rtol=1e-4,
+                                       atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gb-inf with b0 = N == Lloyd
+# ---------------------------------------------------------------------------
+
+def test_nested_full_batch_equals_lloyd(blobs):
+    X, _ = blobs
+    k = 8
+    r1 = _fit(X, k, algorithm="lloyd", seed=3)
+    r2 = _fit(X, k, algorithm="gb", b0=len(X), rho=np.inf, seed=3)
+    m1 = float(full_mse(jnp.asarray(X), jnp.asarray(r1.C)))
+    m2 = float(full_mse(jnp.asarray(X), jnp.asarray(r2.C)))
+    assert r1.converged and r2.converged
+    assert abs(m1 - m2) / m1 < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# end-to-end quality + paper's qualitative claims
+# ---------------------------------------------------------------------------
+
+def test_all_algorithms_reach_reasonable_quality(blobs, blobs_val):
+    X, centers = blobs
+    k = centers.shape[0]
+    base = float(full_mse(jnp.asarray(blobs_val),
+                          jnp.asarray(centers, jnp.float32)))
+    for algo, kw in [("lloyd", {}), ("mb", dict(b0=256)),
+                     ("mbf", dict(b0=256)),
+                     ("gb", dict(b0=256)),
+                     ("tb", dict(b0=256, bounds="hamerly2")),
+                     ("tb", dict(b0=256, bounds="elkan"))]:
+        res = driver.fit(X, k, algorithm=algo, max_rounds=60, seed=0, **kw)
+        mse = float(full_mse(jnp.asarray(blobs_val), jnp.asarray(res.C)))
+        assert mse < 2.5 * base, (algo, mse, base)
+
+
+def test_turbo_pruning_kicks_in(blobs):
+    """tb-inf: once converged at b=N, the bound test eliminates all
+    distance work (n_recomputed -> 0) — the turbocharging effect."""
+    X, _ = blobs
+    res = driver.fit(X, 8, algorithm="tb", b0=512, bounds="hamerly2",
+                     max_rounds=60, seed=0)
+    assert res.converged
+    assert res.telemetry[-1]["n_recomputed"] == 0
+    # and pruning was already substantial before full convergence
+    assert res.telemetry[-3]["n_recomputed"] < 0.05 * len(X)
+
+
+def test_batch_growth_is_nested_and_monotone(blobs):
+    X, _ = blobs
+    res = driver.fit(X, 8, algorithm="gb", b0=128, max_rounds=60, seed=0)
+    bs = [t["b"] for t in res.telemetry if t["b"]]
+    assert all(b2 >= b1 for b1, b2 in zip(bs, bs[1:]))
+    assert bs[-1] == len(X)          # reached the full dataset
+    assert bs[0] == 128
+
+
+def test_lloyd_elkan_equals_lloyd(blobs):
+    """The Elkan-accelerated Lloyd (nested engine at b0=N with faithful
+    per-(i,j) bounds) reaches the identical local minimum."""
+    X, _ = blobs
+    r1 = _fit(X, 8, algorithm="lloyd", seed=5)
+    r2 = _fit(X, 8, algorithm="lloyd-elkan", seed=5, max_rounds=60)
+    m1 = float(full_mse(jnp.asarray(X), jnp.asarray(r1.C)))
+    m2 = float(full_mse(jnp.asarray(X), jnp.asarray(r2.C)))
+    assert r1.converged and r2.converged
+    assert abs(m1 - m2) / m1 < 1e-5
+
+
+def test_sgd_is_mb_with_batch_one(blobs):
+    X, _ = blobs
+    res = driver.fit(X[:500], 4, algorithm="sgd", max_rounds=200, seed=0)
+    assert all(t["b"] == 1 for t in res.telemetry)
+    mse0 = res.telemetry[0]["batch_mse"]
+    # single-point rounds still drive centroids somewhere sensible
+    mse = float(full_mse(jnp.asarray(X[:500]), jnp.asarray(res.C)))
+    assert np.isfinite(mse)
