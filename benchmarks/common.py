@@ -25,9 +25,13 @@ def dataset(name: str, quick: bool = False):
     return X[:n], X[n:]
 
 
-def mse_at_times(telemetry: List[Dict], grid: List[float]) -> List[float]:
-    """Validation MSE at each wall-time point (step function)."""
-    pts = [(t["t"], t["val_mse"]) for t in telemetry
+def mse_at_times(telemetry, grid: List[float]) -> List[float]:
+    """Validation MSE at each wall-time point (step function).
+
+    Accepts `repro.api.Telemetry` records or legacy dict records.
+    """
+    recs = [t.to_dict() if hasattr(t, "to_dict") else t for t in telemetry]
+    pts = [(t["t"], t["val_mse"]) for t in recs
            if t.get("val_mse") is not None]
     out = []
     for g in grid:

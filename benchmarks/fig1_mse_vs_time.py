@@ -15,7 +15,7 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks import common
-from repro.core import driver
+from repro import api
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -37,9 +37,10 @@ def run_dataset(ds: str, *, quick: bool, seeds=(0, 1)):
         curves = []
         final = []
         for seed in seeds:
-            res = driver.fit(X, k, algorithm=algo, X_val=Xv,
-                             max_rounds=3000, time_budget_s=budget,
-                             eval_every=5, seed=seed, **kw)
+            cfg = api.FitConfig(k=k, algorithm=algo, max_rounds=3000,
+                                time_budget_s=budget, eval_every=5,
+                                seed=seed, **kw)
+            res = api.fit(X, cfg, X_val=Xv)
             curves.append(res.telemetry)
             final.append(res.final_mse)
         key = algo if algo != "tb" else "tb-inf"

@@ -14,7 +14,7 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks import common
-from repro.core import driver
+from repro import api
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 RHOS = [1.0, 10.0, 100.0, math.inf]
@@ -29,9 +29,9 @@ def main(quick: bool = True):
     for algo in ("gb", "tb"):
         out[algo] = {}
         for rho in RHOS:
-            res = driver.fit(X, k, algorithm=algo, rho=rho, b0=2000,
-                             X_val=Xv, max_rounds=3000,
-                             time_budget_s=budget, eval_every=5, seed=0)
+            res = api.fit(X, api.FitConfig(
+                k=k, algorithm=algo, rho=rho, b0=2000, max_rounds=3000,
+                time_budget_s=budget, eval_every=5, seed=0), X_val=Xv)
             key = "inf" if math.isinf(rho) else str(int(rho))
             out[algo][key] = res.final_mse
             print(f"  {algo}-rho {key:>4s}: final val MSE "

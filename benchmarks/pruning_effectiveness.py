@@ -15,7 +15,7 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks import common
-from repro.core import driver
+from repro import api
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -24,11 +24,11 @@ def main(quick: bool = True):
     print("== Pruning effectiveness on nested vs resampled batches ==")
     X, _ = common.dataset("infmnist", quick)
     k = 50
-    res = driver.fit(X, k, algorithm="tb", b0=2000, rho=math.inf,
-                     bounds="hamerly2", max_rounds=400,
-                     time_budget_s=20.0 if quick else 60.0, seed=0)
-    fr = [1.0 - t["n_recomputed"] / max(t["b"], 1)
-          for t in res.telemetry if t["b"]]
+    res = api.fit(X, api.FitConfig(
+        k=k, algorithm="tb", b0=2000, rho=math.inf, bounds="hamerly2",
+        max_rounds=400, time_budget_s=20.0 if quick else 60.0, seed=0))
+    fr = [1.0 - t.n_recomputed / max(t.b, 1)
+          for t in res.telemetry if t.b]
     early = float(np.mean(fr[:3]))
     late = float(np.mean(fr[-3:]))
     print(f"  nested: pruned fraction {early:.2%} (early) -> "

@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core import driver
+from repro import api
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -26,9 +26,10 @@ def main(quick: bool = True):
         X, _ = common.dataset(ds, quick)
         n, d = X.shape
         k, b = 50, 5000
-        res = driver.fit(X, k, algorithm="mb", b0=b,
-                         max_rounds=n // b, eval_every=10 ** 9, seed=0)
-        t = res.telemetry[-1]["t"]
+        res = api.fit(X, api.FitConfig(
+            k=k, algorithm="mb", b0=b, max_rounds=n // b,
+            eval_every=10 ** 9, seed=0))
+        t = res.telemetry[-1].t
         flops = 2.0 * n * d * k
         out[ds] = {"n": n, "d": d, "seconds_per_pass": t,
                    "points_per_s": n / t, "gflops": flops / t / 1e9}

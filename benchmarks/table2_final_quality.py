@@ -12,7 +12,7 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks import common
-from repro.core import driver
+from repro import api
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 B0S = [100, 1000, 5000]
@@ -27,15 +27,17 @@ def main(quick: bool = True):
         k = 50
         rounds = 60 if quick else 200
         lloyd_mse = float(np.mean([
-            driver.fit(X, k, algorithm="lloyd", X_val=Xv,
-                       max_rounds=rounds, eval_every=10 ** 9,
-                       seed=s).final_mse for s in seeds]))
+            api.fit(X, api.FitConfig(
+                k=k, algorithm="lloyd", max_rounds=rounds,
+                eval_every=10 ** 9, seed=s), X_val=Xv).final_mse
+            for s in seeds]))
         row = {"lloyd": lloyd_mse}
         for b0 in B0S:
             row[f"tb_b0_{b0}"] = float(np.mean([
-                driver.fit(X, k, algorithm="tb", b0=b0, rho=math.inf,
-                           X_val=Xv, max_rounds=30 * rounds,
-                           eval_every=10 ** 9, seed=s).final_mse
+                api.fit(X, api.FitConfig(
+                    k=k, algorithm="tb", b0=b0, rho=math.inf,
+                    max_rounds=30 * rounds, eval_every=10 ** 9,
+                    seed=s), X_val=Xv).final_mse
                 for s in seeds]))
         out[ds] = row
         print(f"  {ds:9s} lloyd {lloyd_mse:.5f}  " + "  ".join(

@@ -3,17 +3,16 @@
 The classic application of web-scale k-means inside an LM stack: build a
 k-codebook over the (vocab, d_model) embedding table — usable for
 embedding compression, semantic dedup, or routing analysis. Uses the
-reduced tinyllama config (full configs are dry-run-only on this box).
+reduced tinyllama config (full configs are dry-run-only on this box) and
+the unified `repro.api` estimator.
 
     PYTHONPATH=src python examples/cluster_embeddings.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import fit
-from repro.core.state import full_mse
+from repro.api import FitConfig, NestedKMeans
 from repro.models import model as M
 
 cfg = configs.get_reduced("tinyllama-1.1b")
@@ -22,17 +21,17 @@ E = np.asarray(params["embed"], np.float32)          # (vocab, d)
 print(f"embedding table: {E.shape}")
 
 K = 32
-res = fit(E, K, algorithm="tb", rho=float("inf"), b0=128,
-          bounds="hamerly2", max_rounds=200, seed=0)
-print(f"tb-inf codebook: converged={res.converged} "
-      f"rounds={len(res.telemetry)}")
+km = NestedKMeans(FitConfig(k=K, algorithm="tb", rho=float("inf"),
+                            b0=128, bounds="hamerly2", max_rounds=200,
+                            seed=0)).fit(E)
+print(f"tb-inf codebook: converged={km.converged_} rounds={km.n_rounds_}")
 
-mse = float(full_mse(jnp.asarray(E), jnp.asarray(res.C)))
+mse = -km.score(E) / E.shape[0]
 print(f"VQ reconstruction MSE: {mse:.6f}")
 
-# codebook utilisation
-a = np.asarray(res.state.points.a)
-sizes = np.bincount(a[a >= 0], minlength=K)
+# codebook utilisation via the estimator's inference surface
+a = km.predict(E)
+sizes = np.bincount(a, minlength=K)
 print(f"codebook usage: min={sizes.min()} max={sizes.max()} "
       f"empty={int((sizes == 0).sum())}")
 compression = E.shape[0] * E.shape[1] / (K * E.shape[1] + E.shape[0])

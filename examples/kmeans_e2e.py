@@ -1,10 +1,13 @@
 """End-to-end production driver for the paper's technique.
 
-Demonstrates the full substrate on one box:
+Demonstrates the full substrate on one box, entirely through the
+unified `repro.api` surface:
   * sharded data pipeline (nested-prefix property across shards),
-  * distributed tb-inf rounds via shard_map (run with
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 to see 8 shards),
-  * checkpoint mid-run + elastic restart,
+  * the same FitConfig driving the LocalEngine or the MeshEngine
+    (shard_map; run with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 for 8 shards),
+  * checkpoint mid-run + elastic restart (FitConfig round-trips
+    through the checkpoint manifest),
   * validation MSE telemetry.
 
     PYTHONPATH=src python examples/kmeans_e2e.py
@@ -12,14 +15,16 @@ Demonstrates the full substrate on one box:
         PYTHONPATH=src python examples/kmeans_e2e.py --distributed
 """
 import argparse
+import dataclasses
+import json
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import FitConfig, NestedKMeans
 from repro.checkpoint.store import CheckpointStore
-from repro.core import fit
 from repro.core.state import full_mse
 from repro.data.synthetic import infmnist_like
 
@@ -35,41 +40,45 @@ def main():
     k = 50
 
     if args.distributed:
-        from repro.core.distributed import fit_distributed
         ndev = len(jax.devices())
-        mesh = jax.make_mesh(
-            (ndev, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        res = fit_distributed(X_train, k, mesh, data_axes=("data",),
-                              b0=2048, rho=float("inf"),
-                              bounds="hamerly2", max_rounds=300, seed=0)
+        mesh = jax.make_mesh((ndev, 1), ("data", "model"))
+        cfg = FitConfig(k=k, algorithm="tb", b0=2048, rho=float("inf"),
+                        bounds="hamerly2", max_rounds=300, seed=0,
+                        backend="mesh", data_axes=("data",),
+                        capacity_floor=256)
+        km = NestedKMeans(cfg, mesh=mesh).fit(X_train)
         print(f"distributed over {ndev} devices: "
-              f"rounds={len(res.telemetry)} converged={res.converged}")
-        mse = float(full_mse(jnp.asarray(X_val), jnp.asarray(res.C)))
+              f"rounds={km.n_rounds_} converged={km.converged_}")
+        mse = float(full_mse(jnp.asarray(X_val),
+                             jnp.asarray(km.cluster_centers_)))
         print(f"val MSE {mse:.5f}")
         return
 
     # single-host run with mid-run checkpoint + elastic restart
     with tempfile.TemporaryDirectory() as d:
         store = CheckpointStore(d, keep=2)
+        cfg = FitConfig(k=k, algorithm="tb", b0=2048, bounds="hamerly2",
+                        max_rounds=12, seed=0)
 
-        # phase 1: run 12 rounds, then "crash"
-        res1 = fit(X_train, k, algorithm="tb", b0=2048,
-                   bounds="hamerly2", max_rounds=12, seed=0)
-        store.save(12, {"C": jnp.asarray(res1.C),
-                        "b": jnp.asarray(res1.telemetry[-1]["b"])})
-        print(f"phase-1: {len(res1.telemetry)} rounds; checkpointed; "
-              f"b={res1.telemetry[-1]['b']}")
+        # phase 1: run 12 rounds, then "crash". The config itself rides
+        # along in the manifest (to_dict/from_dict round-trip).
+        km1 = NestedKMeans(cfg).fit(X_train)
+        store.save(12, {"C": jnp.asarray(km1.cluster_centers_),
+                        "b": jnp.asarray(km1.telemetry_[-1].b)})
+        manifest = json.dumps(cfg.to_dict())
+        print(f"phase-1: {km1.n_rounds_} rounds; checkpointed; "
+              f"b={km1.telemetry_[-1].b}")
 
         # phase 2: restart from the checkpoint (warm centroids + batch)
         got = store.restore({"C": jnp.zeros((k, X.shape[1])),
                              "b": jnp.zeros((), jnp.int32)})
-        res2 = fit(X_train, k, algorithm="tb", b0=int(got["b"]),
-                   bounds="hamerly2", max_rounds=200, seed=0,
-                   X_val=X_val, eval_every=10,
-                   init_C=np.asarray(got["C"]))
-        print(f"phase-2 (restarted): converged={res2.converged} "
-              f"final MSE={res2.final_mse:.5f}")
+        cfg2 = dataclasses.replace(
+            FitConfig.from_dict(json.loads(manifest)),
+            b0=int(got["b"]), max_rounds=200, eval_every=10)
+        km2 = NestedKMeans(cfg2).fit(X_train, X_val=X_val,
+                                     init_C=np.asarray(got["C"]))
+        print(f"phase-2 (restarted): converged={km2.converged_} "
+              f"final MSE={km2.final_mse_:.5f}")
 
 
 if __name__ == "__main__":

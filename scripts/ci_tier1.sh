@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Fast tier-1 loop: the tier-1 pytest command restricted to the fast
+# subset (tests not marked "slow"), so the edit-test loop stays under
+# ~2 minutes on this container. The full tier-1 command remains
+#     PYTHONPATH=src python -m pytest -x -q
+# and is what CI gates on; this script is the developer inner loop.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    exec python -m pytest -x -q -m "not slow" "$@"

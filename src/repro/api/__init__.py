@@ -1,0 +1,49 @@
+"""repro.api — the single public surface of the reproduction.
+
+    from repro.api import FitConfig, NestedKMeans
+
+    cfg = FitConfig(k=50, algorithm="tb", rho=float("inf"), b0=2000)
+    km = NestedKMeans(cfg).fit(X_train, X_val=X_val)
+    labels = km.predict(X_new)
+
+Execution backends are swappable without touching caller code:
+
+    from repro.api import MeshEngine
+    km = NestedKMeans(dataclasses.replace(cfg, backend="mesh"),
+                      mesh=my_mesh).fit(X)
+
+`fit()` is a functional convenience over the estimator for scripts that
+just want a `FitOutcome`. The legacy entry points (`repro.core.fit`,
+`repro.core.distributed.fit_distributed`) are deprecation shims over
+this package and will not grow new features.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.api.config import ALGORITHMS, BACKENDS, BOUNDS, FitConfig
+from repro.api.engine import (Engine, EngineRun, FitOutcome, LocalEngine,
+                              MeshEngine, cap_bucket, make_engine, next_pow2,
+                              run_loop)
+from repro.api.estimator import NestedKMeans, NotFittedError
+from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
+
+
+def fit(X, config: FitConfig, *, X_val=None, mesh=None,
+        init_C: Optional[np.ndarray] = None,
+        on_round: Optional[RoundCallback] = None) -> FitOutcome:
+    """One-call fit: build the engine for ``config`` and run it."""
+    km = NestedKMeans(config, mesh=mesh, on_round=on_round)
+    km.fit(X, X_val=X_val, init_C=init_C)
+    return km.outcome_
+
+
+__all__ = [
+    "FitConfig", "NestedKMeans", "NotFittedError", "fit",
+    "Engine", "EngineRun", "LocalEngine", "MeshEngine", "make_engine",
+    "run_loop", "FitOutcome", "Telemetry", "RoundCallback",
+    "final_val_mse", "cap_bucket", "next_pow2",
+    "ALGORITHMS", "BOUNDS", "BACKENDS",
+]

@@ -1,0 +1,160 @@
+"""`FitConfig`: the single, validated, serialisable fit specification.
+
+Replaces the 18-kwarg `repro.core.fit(...)` signature and the divergent
+`fit_distributed(...)` kwargs bag. A config is frozen (hashable, safe to
+use as a cache key for compiled-executable reuse), validates itself at
+construction, and round-trips through plain dicts — the format used by
+checkpoint metadata and benchmark manifests.
+
+Non-finite floats (`rho=inf`, `time_budget_s=inf`) are encoded as the
+string ``"inf"`` in `to_dict()` so manifests stay strict-JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+ALGORITHMS = ("lloyd", "lloyd-elkan", "mb", "sgd", "mbf", "gb", "tb")
+BOUNDS = ("none", "hamerly2", "elkan")
+BACKENDS = ("local", "mesh")
+
+# algorithms driven by the nested grow-batch loop (the tb/gb family)
+NESTED_ALGOS = ("gb", "tb", "lloyd-elkan")
+
+
+def _enc_float(x: float) -> Any:
+    if math.isinf(x):
+        return "inf" if x > 0 else "-inf"
+    return float(x)
+
+
+def _dec_float(x: Any) -> float:
+    return float(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    """Everything a fit needs besides the data and the execution engine.
+
+    Attributes mirror the paper's knobs:
+      k           number of clusters.
+      algorithm   lloyd | lloyd-elkan | mb | sgd | mbf | gb | tb.
+      rho         batch-growth threshold (Alg. 6); inf = gb-inf/tb-inf.
+      b0          initial (global) batch size for the nested family /
+                  fixed batch size for mb / mbf.
+      bounds      none | hamerly2 | elkan (nested family only).
+      capacity_floor  smallest power-of-two recompute bucket the
+                  capacity policy will compile (see driver docstring).
+      max_rounds / time_budget_s   work budgets.
+      eval_every  validation-MSE cadence (rounds), when X_val is given.
+      use_shalf   include Hamerly's s(j)/2 test in the hamerly2 bound.
+      kernel_backend  None (auto) | "ref" | "pallas".
+      shuffle     pre-shuffle the data (paper init = first k of shuffle).
+      converge_patience  quiet full-batch rounds before declaring
+                  convergence.
+      seed        numpy PRNG seed for shuffle + mb resampling.
+      backend     "local" (single process) | "mesh" (shard_map engine).
+      data_axes   mesh axes the points are row-sharded over (mesh only).
+    """
+    k: int
+    algorithm: str = "tb"
+    rho: float = math.inf
+    b0: int = 5000
+    bounds: str = "hamerly2"
+    capacity_floor: int = 1024
+    max_rounds: int = 10_000
+    time_budget_s: float = math.inf
+    eval_every: int = 10
+    use_shalf: bool = True
+    kernel_backend: Optional[str] = None
+    shuffle: bool = True
+    converge_patience: int = 2
+    seed: int = 0
+    backend: str = "local"
+    data_axes: Tuple[str, ...] = ("data",)
+
+    def __post_init__(self):
+        if not isinstance(self.k, int) or self.k < 1:
+            raise ValueError(f"k must be a positive int, got {self.k!r}")
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}; "
+                             f"expected one of {ALGORITHMS}")
+        if self.bounds not in BOUNDS:
+            raise ValueError(f"unknown bounds {self.bounds!r}; "
+                             f"expected one of {BOUNDS}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS}")
+        if self.b0 < 1:
+            raise ValueError(f"b0 must be >= 1, got {self.b0}")
+        if self.rho <= 0:
+            raise ValueError(f"rho must be > 0, got {self.rho}")
+        if self.max_rounds < 1:
+            raise ValueError(f"max_rounds must be >= 1, got "
+                             f"{self.max_rounds}")
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got "
+                             f"{self.eval_every}")
+        if self.converge_patience < 1:
+            raise ValueError("converge_patience must be >= 1")
+        if self.capacity_floor < 1:
+            raise ValueError("capacity_floor must be >= 1")
+        if self.kernel_backend not in (None, "ref", "pallas"):
+            raise ValueError(f"unknown kernel_backend "
+                             f"{self.kernel_backend!r}")
+        if self.backend == "mesh" and self.algorithm not in ("gb", "tb"):
+            raise ValueError(
+                f"the mesh engine only runs the nested family (gb/tb); "
+                f"got algorithm={self.algorithm!r}")
+        if self.backend == "mesh" and self.bounds == "elkan":
+            raise ValueError(
+                "the mesh engine does not shard the per-(i,j) elkan "
+                "bound state; use bounds='hamerly2' or 'none'")
+        if not isinstance(self.data_axes, tuple):
+            object.__setattr__(self, "data_axes", tuple(self.data_axes))
+
+    # -- canonicalisation ---------------------------------------------------
+
+    def resolve(self, n: int) -> "FitConfig":
+        """Fold the paper's algorithm aliases into their canonical forms.
+
+        sgd == mb with b=1; lloyd-elkan == tb at b0=N with elkan bounds;
+        gb == tb with bounds="none"; the non-bounded algorithms carry
+        bounds="none". ``n`` is the dataset size (lloyd-elkan needs it).
+        """
+        c = self
+        if c.algorithm == "sgd":
+            c = dataclasses.replace(c, algorithm="mb", b0=1)
+        if c.algorithm == "lloyd-elkan":
+            c = dataclasses.replace(c, algorithm="tb", b0=n,
+                                    bounds="elkan", rho=math.inf)
+        if c.algorithm == "gb":
+            c = dataclasses.replace(c, algorithm="tb", bounds="none")
+        if c.algorithm in ("lloyd", "mb", "mbf"):
+            c = dataclasses.replace(c, bounds="none")
+        return c
+
+    # -- serialisation ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe dict (inf encoded as the string "inf")."""
+        d = dataclasses.asdict(self)
+        d["rho"] = _enc_float(self.rho)
+        d["time_budget_s"] = _enc_float(self.time_budget_s)
+        d["data_axes"] = list(self.data_axes)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FitConfig":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown FitConfig fields: {sorted(unknown)}")
+        if "rho" in d:
+            d["rho"] = _dec_float(d["rho"])
+        if "time_budget_s" in d:
+            d["time_budget_s"] = _dec_float(d["time_budget_s"])
+        if "data_axes" in d:
+            d["data_axes"] = tuple(d["data_axes"])
+        return cls(**d)

@@ -1,0 +1,405 @@
+"""Execution engines + the ONE host loop shared by all of them.
+
+Before this package existed the growth schedule, power-of-two capacity
+bucketing, overflow retry, convergence patience and wall-clock telemetry
+were copy-pasted between `core/driver.py` (single device) and
+`core/distributed.py` (shard_map). They now live once, in `run_loop`;
+an `Engine` only knows how to place data and execute one compiled round.
+
+  Engine.begin(X, config, ...)  -> EngineRun   (data placement + state)
+  EngineRun.nested_step/lloyd_step/mb_step     (one compiled round)
+  run_loop(run, config, ...)    -> FitOutcome  (the host schedule)
+
+`LocalEngine` wraps the bucketed-jit rounds; `MeshEngine` wraps the
+shard_map rounds with points row-sharded over the mesh's data axes and
+replicated cluster stats. Both produce bit-identical centroids for the
+same (data placement, config) because every round function is exact and
+the host schedule is shared.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import FitConfig
+from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
+from repro.core import rounds
+from repro.core.state import KMeansState, RoundInfo, full_mse, init_state
+
+
+# --------------------------------------------------------------------------
+# result record
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FitOutcome:
+    """What a fit produces: centroids + full state + structured telemetry.
+
+    ``labels`` is in the CALLER's row order (the engines shuffle and, on
+    a mesh, interleave/pad internally; the inverse mapping is applied
+    here). ``-1`` marks rows the nested batch never reached.
+    """
+    C: np.ndarray
+    state: KMeansState
+    labels: np.ndarray
+    telemetry: List[Telemetry]
+    converged: bool
+    algorithm: str
+    config: FitConfig
+
+    @property
+    def final_mse(self) -> float:
+        return final_val_mse(self.telemetry)
+
+
+# --------------------------------------------------------------------------
+# capacity policy (shared)
+# --------------------------------------------------------------------------
+
+def next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def cap_bucket(need: int, b: int, floor: int) -> Optional[int]:
+    """Power-of-two capacity with 2x slack; None == recompute everything."""
+    cap = max(floor, next_pow2(2 * max(need, 1)))
+    return None if cap >= b else cap
+
+
+# --------------------------------------------------------------------------
+# the Engine protocol
+# --------------------------------------------------------------------------
+
+class EngineRun:
+    """One fit in flight: placed data + initial state + round executors.
+
+    Subclasses set:
+      state            initial KMeansState (already placed/sharded)
+      b                initial batch size in ENGINE UNITS (global rows
+                       for LocalEngine, per-shard rows for MeshEngine)
+      b_max            largest batch in engine units
+      n_shards         data shards (1 for local)
+      n_active_target  info.n_active value meaning "full data active"
+      orig_index       (n_storage,) int: original caller row held at
+                       each internal storage row (-1 = structural pad)
+      n_points         caller's dataset size (pads excluded)
+    """
+    state: KMeansState
+    b: int
+    b_max: int
+    n_shards: int = 1
+    n_active_target: int = 0
+    orig_index: np.ndarray = None
+    n_points: int = 0
+
+    # -- round executors (pure: state in -> (state, info)) ------------------
+
+    def nested_step(self, state: KMeansState, b: int,
+                    capacity: Optional[int]
+                    ) -> Tuple[KMeansState, RoundInfo]:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not run the nested family")
+
+    def lloyd_step(self, state: KMeansState
+                   ) -> Tuple[KMeansState, RoundInfo]:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not run lloyd")
+
+    def mb_step(self, state: KMeansState, fixed: bool
+                ) -> Tuple[KMeansState, RoundInfo]:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not run mb/mbf")
+
+    def eval_mse(self, state: KMeansState) -> Optional[float]:
+        """Validation MSE of the current centroids (None: no val set)."""
+        return None
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """An execution backend: owns data placement + compiled rounds."""
+
+    def begin(self, X, config: FitConfig, *,
+              X_val=None, init_C: Optional[np.ndarray] = None) -> EngineRun:
+        """Shuffle/pad/place ``X`` and build the initial state."""
+        ...
+
+
+# --------------------------------------------------------------------------
+# THE shared host loop
+# --------------------------------------------------------------------------
+
+def run_loop(run: EngineRun, config: FitConfig, *,
+             on_round: Optional[RoundCallback] = None) -> FitOutcome:
+    """Growth schedule + capacity bucketing + overflow retry + patience.
+
+    ``config`` must already be `resolve()`d (no alias algorithms). The
+    loop is backend-agnostic: every quantity it branches on comes from
+    the (psum-reduced, hence shard-replicated) RoundInfo, so the same
+    schedule drives one device or a pod mesh.
+    """
+    algorithm = config.algorithm
+    bounds = config.bounds
+    state = run.state
+    b = run.b
+    capacity: Optional[int] = None
+    telemetry: List[Telemetry] = []
+    t_work = 0.0
+    quiet_rounds = 0
+    converged = False
+
+    def record(info: RoundInfo) -> None:
+        rec = Telemetry(
+            round=len(telemetry), t=t_work, b=int(info.n_active),
+            batch_mse=float(info.batch_mse),
+            n_changed=int(info.n_changed),
+            n_recomputed=int(info.n_recomputed),
+            grow=bool(info.grow), r_median=float(info.r_median),
+            val_mse=(run.eval_mse(state)
+                     if len(telemetry) % config.eval_every == 0 else None))
+        telemetry.append(rec)
+        if on_round:
+            on_round(rec)
+
+    for _ in range(config.max_rounds):
+        if t_work >= config.time_budget_s:
+            break
+        t0 = time.perf_counter()
+
+        if algorithm == "lloyd":
+            new_state, info = run.lloyd_step(state)
+        elif algorithm in ("mb", "mbf"):
+            new_state, info = run.mb_step(state, fixed=(algorithm == "mbf"))
+        else:  # tb family (incl. gb via bounds="none")
+            while True:
+                new_state, info = run.nested_step(state, b, capacity)
+                if not bool(info.overflow):
+                    break
+                # overflow retry: same input state, doubled bucket —
+                # exactness is never traded for speed.
+                capacity = (None if capacity is None or 2 * capacity >= b
+                            else 2 * capacity)
+
+        jax.block_until_ready(new_state.stats.C)
+        t_work += time.perf_counter() - t0
+        state = new_state
+        record(info)
+
+        if algorithm == "tb":
+            if bounds == "hamerly2":
+                need = -(-int(info.n_recomputed) // run.n_shards)
+                if bool(info.grow) and b < run.b_max:
+                    # a doubling adds b new points that always need a
+                    # full pass — start the grown bucket dense
+                    capacity = None
+                else:
+                    capacity = cap_bucket(need, b, config.capacity_floor)
+            if bool(info.grow):
+                b = min(2 * b, run.b_max)
+            if (int(info.n_active) >= run.n_active_target
+                    and int(info.n_changed) == 0
+                    and float(jnp.max(state.stats.p)) == 0.0):
+                quiet_rounds += 1
+                if quiet_rounds >= config.converge_patience:
+                    converged = True
+                    break
+            else:
+                quiet_rounds = 0
+        elif algorithm == "lloyd":
+            if int(info.n_changed) == 0:
+                converged = True
+                break
+
+    # final validation point (outside the timed region, like every eval)
+    final = run.eval_mse(state)
+    if final is not None:
+        telemetry.append(Telemetry(
+            round=len(telemetry), t=t_work, b=b * run.n_shards,
+            batch_mse=None, n_changed=0, n_recomputed=0, grow=False,
+            r_median=None, val_mse=final))
+
+    # un-shuffle the final assignments back to the caller's row order
+    a = np.asarray(state.points.a)
+    labels = np.full(run.n_points, -1, np.int32)
+    valid = run.orig_index >= 0
+    labels[run.orig_index[valid]] = a[valid]
+
+    return FitOutcome(C=np.asarray(state.stats.C), state=state,
+                      labels=labels, telemetry=telemetry,
+                      converged=converged, algorithm=algorithm,
+                      config=config)
+
+
+# --------------------------------------------------------------------------
+# LocalEngine — single-process bucketed jit
+# --------------------------------------------------------------------------
+
+# shared with estimator.partial_fit so streaming batches of a repeated
+# shape hit the same jit cache as fit()
+nested_jit = jax.jit(
+    rounds.nested_round,
+    static_argnames=("b", "rho", "bounds", "capacity", "use_shalf",
+                     "kernel_backend", "data_axes"))
+_mb_jit = jax.jit(rounds.mb_round,
+                  static_argnames=("fixed", "kernel_backend"))
+_lloyd_jit = jax.jit(rounds.lloyd_round, static_argnames=("kernel_backend",))
+
+
+class _LocalRun(EngineRun):
+    def __init__(self, X, config: FitConfig, X_val, init_C):
+        rng = np.random.default_rng(config.seed)
+        X = np.asarray(X)
+        N = X.shape[0]
+        perm = rng.permutation(N) if config.shuffle else np.arange(N)
+        self._Xd = jnp.asarray(X[perm])
+        self._Xv = jnp.asarray(X_val) if X_val is not None else None
+        self._config = config
+        self._rng = rng
+
+        state = init_state(self._Xd, config.k, bounds=config.bounds)
+        if init_C is not None:       # warm start (checkpoint restart)
+            state = dataclasses.replace(state, stats=dataclasses.replace(
+                state.stats, C=jnp.asarray(init_C, jnp.float32)))
+        self.state = state
+        self.b = min(config.b0, N)
+        self.b_max = N
+        self.n_shards = 1
+        self.n_active_target = N
+        self.orig_index = perm        # storage row i holds X[perm[i]]
+        self.n_points = N
+        # mb/mbf resampling stream (paper footnote 1: cycle a reshuffle)
+        self._mb_pos = 0
+        self._mb_perm = rng.permutation(N)
+
+    def nested_step(self, state, b, capacity):
+        return nested_jit(self._Xd, state, b=b, rho=self._config.rho,
+                          bounds=self._config.bounds, capacity=capacity,
+                          use_shalf=self._config.use_shalf,
+                          kernel_backend=self._config.kernel_backend)
+
+    def lloyd_step(self, state):
+        return _lloyd_jit(self._Xd, state,
+                          kernel_backend=self._config.kernel_backend)
+
+    def mb_step(self, state, fixed):
+        N, b = self.b_max, self.b
+        if self._mb_pos + b > N:
+            self._mb_perm = self._rng.permutation(N)
+            self._mb_pos = 0
+        idx = jnp.asarray(self._mb_perm[self._mb_pos:self._mb_pos + b])
+        self._mb_pos += b
+        return _mb_jit(self._Xd, idx, state, fixed=fixed,
+                       kernel_backend=self._config.kernel_backend)
+
+    def eval_mse(self, state):
+        if self._Xv is None:
+            return None
+        return float(full_mse(self._Xv, state.stats.C))
+
+
+class LocalEngine:
+    """Single-process engine over the bucketed-jit round functions."""
+
+    def begin(self, X, config: FitConfig, *, X_val=None,
+              init_C=None) -> EngineRun:
+        return _LocalRun(X, config, X_val, init_C)
+
+
+# --------------------------------------------------------------------------
+# MeshEngine — shard_map over the device mesh
+# --------------------------------------------------------------------------
+
+class _MeshRun(EngineRun):
+    def __init__(self, X, config: FitConfig, mesh, X_val, init_C):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import make_sharded_round, shard_state
+
+        data_axes = config.data_axes
+        n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+        rng = np.random.default_rng(config.seed)
+        X = np.asarray(X)
+        N_real = X.shape[0]
+        pad = -N_real % n_shards
+        if pad:
+            # structural padding at the END of the shuffle: padded rows
+            # sit at the tail of every shard and b_local is capped below
+            # them, so they can never enter a nested prefix.
+            X = np.concatenate([X, np.repeat(X[:1], pad, axis=0)])
+        N = X.shape[0]
+        perm = (np.concatenate([rng.permutation(N_real),
+                                np.arange(N_real, N)])
+                if config.shuffle else np.arange(N))
+        # interleave so shard s gets global-shuffle positions s::n_shards
+        # -> the union of shard prefixes of size b/n_shards IS the global
+        # prefix of size b of the shuffle.
+        Xh = X[perm].reshape(N // n_shards, n_shards, -1).transpose(1, 0, 2)
+        self._Xd = jax.device_put(
+            jnp.asarray(Xh.reshape(N, -1)),
+            NamedSharding(mesh, P(data_axes, None)))
+        C0 = (jnp.asarray(init_C, jnp.float32) if init_C is not None
+              else jnp.asarray(X[perm[:config.k]], jnp.float32))
+
+        state = init_state(self._Xd, config.k, bounds=config.bounds)
+        state = dataclasses.replace(
+            state, stats=dataclasses.replace(state.stats, C=C0))
+        self.state = shard_state(state, mesh, data_axes)
+
+        self._Xv = jnp.asarray(X_val) if X_val is not None else None
+        self._config = config
+        self._mesh = mesh
+        self._make_round = make_sharded_round
+        n_local = N_real // n_shards    # padded tail rows stay inactive
+        self.b = max(1, min(config.b0, N_real) // n_shards)
+        self.b_max = max(1, n_local)
+        self.n_shards = n_shards
+        self.n_active_target = n_local * n_shards
+        # storage row shard*(N/s)+i holds shuffle position i*s+shard;
+        # positions >= N_real are structural pads
+        pos = np.arange(N).reshape(N // n_shards, n_shards).T.ravel()
+        orig = perm[pos]
+        self.orig_index = np.where(orig < N_real, orig, -1)
+        self.n_points = N_real
+
+    def nested_step(self, state, b, capacity):
+        round_fn = self._make_round(
+            self._mesh, self._config.data_axes, b_local=b,
+            rho=self._config.rho, bounds=self._config.bounds,
+            capacity=capacity, use_shalf=self._config.use_shalf)
+        return round_fn(self._Xd, state)
+
+    def eval_mse(self, state):
+        if self._Xv is None:
+            return None
+        return float(full_mse(self._Xv, state.stats.C))
+
+
+class MeshEngine:
+    """Multi-device engine: points row-sharded, cluster stats replicated.
+
+    The S/v/sse deltas are psum-reduced inside the round, so the stats —
+    and therefore the controller's growth decision — are bit-identical
+    on every shard with no host round-trip. Only the nested (gb/tb)
+    family is supported; `FitConfig.__post_init__` enforces this.
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def begin(self, X, config: FitConfig, *, X_val=None,
+              init_C=None) -> EngineRun:
+        return _MeshRun(X, config, self.mesh, X_val, init_C)
+
+
+def make_engine(config: FitConfig, *, mesh=None) -> Engine:
+    """Engine for ``config.backend`` ("mesh" requires a mesh)."""
+    if config.backend == "mesh":
+        if mesh is None:
+            raise ValueError("backend='mesh' needs a jax.sharding.Mesh")
+        return MeshEngine(mesh)
+    return LocalEngine()

@@ -1,0 +1,192 @@
+"""`NestedKMeans`: the sklearn-style front door to every engine.
+
+    from repro.api import FitConfig, NestedKMeans
+
+    km = NestedKMeans(FitConfig(k=50, algorithm="tb", b0=2000))
+    km.fit(X_train, X_val=X_val)
+    labels = km.predict(X_new)
+
+`partial_fit` is the serving-path primitive: it folds a fresh batch into
+the running S/v statistics with ONE nested round (new points enter with
+``a == -1`` exactly like a batch doubling), so a stream of batches keeps
+refining the codebook without re-touching old data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import FitConfig
+from repro.api.engine import (Engine, FitOutcome, make_engine, nested_jit,
+                              run_loop)
+from repro.api.telemetry import RoundCallback, Telemetry
+from repro.core.state import full_mse, init_state
+from repro.kernels import ops
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+class NestedKMeans:
+    """Estimator over a `FitConfig` and an execution `Engine`.
+
+    After `fit` / `partial_fit`:
+      cluster_centers_   (k, d) float32 ndarray
+      labels_            (n,) assignments of the fitted data (fit only)
+      inertia_           batch MSE at the last round (fit only)
+      telemetry_         List[Telemetry], one per host round
+      converged_         bool
+      n_rounds_          len(telemetry_)
+    """
+
+    def __init__(self, config: FitConfig, *, engine: Optional[Engine] = None,
+                 mesh=None, on_round: Optional[RoundCallback] = None):
+        self.config = config
+        self.engine = engine or make_engine(config, mesh=mesh)
+        self.on_round = on_round
+        self.telemetry_: List[Telemetry] = []
+        self._outcome: Optional[FitOutcome] = None
+        self._stats = None          # streaming ClusterStats (partial_fit)
+
+    # -- fitting ------------------------------------------------------------
+
+    def fit(self, X, *, X_val=None,
+            init_C: Optional[np.ndarray] = None) -> "NestedKMeans":
+        """Run the configured algorithm to convergence / budget."""
+        cfg = self.config.resolve(int(np.asarray(X).shape[0]))
+        run = self.engine.begin(X, cfg, X_val=X_val, init_C=init_C)
+        out = run_loop(run, cfg, on_round=self.on_round)
+        self._outcome = out
+        self._stats = out.state.stats
+        # copy: later partial_fit records must not mutate the outcome's
+        # own telemetry history
+        self.telemetry_ = list(out.telemetry)
+        return self
+
+    def partial_fit(self, X) -> "NestedKMeans":
+        """Fold one streaming batch into the codebook (one nested round).
+
+        The incoming points enter unseen (``a == -1``): the round assigns
+        them, adds them to S/v, and moves the centroids to the updated
+        means — the exact update a batch doubling applies to new points
+        inside `fit`. Repeated calls keep absorbing traffic at O(batch)
+        cost per call.
+        """
+        if self.config.backend != "local":
+            raise NotImplementedError(
+                "partial_fit currently runs on the local engine only; "
+                "stream with backend='local' (mesh streaming is a "
+                "ROADMAP item)")
+        X = np.asarray(X)
+        cfg = self.config.resolve(int(X.shape[0]))
+        Xd = jnp.asarray(X)
+        state = init_state(Xd, cfg.k, bounds=cfg.bounds)
+        if self._stats is not None:
+            # carry the running statistics; bounds state restarts per
+            # batch (new points have no history to bound against)
+            state = dataclasses.replace(state, stats=self._stats)
+        elif X.shape[0] < cfg.k:
+            raise ValueError(
+                f"first partial_fit batch must have >= k={cfg.k} rows")
+        t_prev = self.telemetry_[-1].t if self.telemetry_ else 0.0
+        t0 = time.perf_counter()
+        new_state, info = nested_jit(
+            Xd, state, b=int(X.shape[0]), rho=cfg.rho, bounds=cfg.bounds,
+            capacity=None, use_shalf=cfg.use_shalf,
+            kernel_backend=cfg.kernel_backend)
+        jax.block_until_ready(new_state.stats.C)
+        self._stats = new_state.stats
+        rec = Telemetry(
+            round=len(self.telemetry_),
+            t=t_prev + time.perf_counter() - t0, b=int(info.n_active),
+            batch_mse=float(info.batch_mse),
+            n_changed=int(info.n_changed),
+            n_recomputed=int(info.n_recomputed),
+            grow=bool(info.grow), r_median=float(info.r_median))
+        self.telemetry_.append(rec)
+        if self.on_round:
+            self.on_round(rec)
+        return self
+
+    # -- fitted attributes --------------------------------------------------
+
+    def _require_fitted(self):
+        if self._stats is None:
+            raise NotFittedError("call fit() or partial_fit() first")
+
+    @property
+    def cluster_centers_(self) -> np.ndarray:
+        self._require_fitted()
+        return np.asarray(self._stats.C)
+
+    @property
+    def counts_(self) -> np.ndarray:
+        """Per-cluster membership counts v (codebook occupancy)."""
+        self._require_fitted()
+        return np.asarray(self._stats.v)
+
+    @property
+    def labels_(self) -> np.ndarray:
+        """Assignments of the fitted data, in the caller's row order
+        (-1 = row never entered the nested batch)."""
+        self._require_fitted()
+        if self._outcome is None:
+            raise NotFittedError("labels_ requires a full fit()")
+        return self._outcome.labels
+
+    @property
+    def inertia_(self) -> float:
+        self._require_fitted()
+        for rec in reversed(self.telemetry_):
+            if rec.batch_mse is not None:
+                return rec.batch_mse
+        return float("nan")
+
+    @property
+    def converged_(self) -> bool:
+        return self._outcome.converged if self._outcome else False
+
+    @property
+    def n_rounds_(self) -> int:
+        return len(self.telemetry_)
+
+    @property
+    def outcome_(self) -> FitOutcome:
+        self._require_fitted()
+        if self._outcome is None:
+            raise NotFittedError("outcome_ requires a full fit()")
+        return self._outcome
+
+    @property
+    def final_mse_(self) -> float:
+        from repro.api.telemetry import final_val_mse
+        return final_val_mse(self.telemetry_)
+
+    # -- inference ----------------------------------------------------------
+
+    def predict(self, X) -> np.ndarray:
+        """Nearest-centroid index for each row of ``X``."""
+        self._require_fitted()
+        a, _, _ = ops.assign_top2(jnp.asarray(X), self._stats.C,
+                                  backend=self.config.kernel_backend)
+        return np.asarray(a)
+
+    def transform(self, X) -> np.ndarray:
+        """Euclidean distance of each row to every centroid: (n, k)."""
+        self._require_fitted()
+        from repro.kernels import ref
+        d2 = ref.pairwise_dist2(jnp.asarray(X), self._stats.C)
+        return np.asarray(jnp.sqrt(jnp.maximum(d2, 0.0)))
+
+    def score(self, X) -> float:
+        """Negative inertia (−sum of squared distances), sklearn-style."""
+        self._require_fitted()
+        X = jnp.asarray(X)
+        return -float(full_mse(X, self._stats.C)) * int(X.shape[0])

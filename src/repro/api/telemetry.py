@@ -1,0 +1,50 @@
+"""Structured per-round telemetry replacing the ad-hoc dict records.
+
+The engines emit one `Telemetry` record per round; callbacks receive the
+record as it is appended, so a serving loop can stream progress without
+polling. `to_dict()` keeps the exact key set the legacy dict records
+used, so checkpoints/manifests written by older runs stay readable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """One host-loop round.
+
+    ``t`` is cumulative *compute* wall-clock (validation eval excluded,
+    matching the paper's protocol §4.3). ``val_mse`` is None on rounds
+    where validation was not evaluated.
+    """
+    round: int                 # 0-based host-loop round index
+    t: float                   # cumulative compute seconds
+    b: int                     # active (global) batch size this round
+    batch_mse: Optional[float]
+    n_changed: int
+    n_recomputed: int
+    grow: bool
+    r_median: Optional[float]  # controller's median sigma_C/p ratio
+    val_mse: Optional[float] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Telemetry":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+# callback invoked with each record as it is produced
+RoundCallback = Callable[[Telemetry], None]
+
+
+def final_val_mse(telemetry: List[Telemetry]) -> float:
+    """Last recorded validation MSE (nan if none was ever evaluated)."""
+    for rec in reversed(telemetry):
+        if rec.val_mse is not None:
+            return rec.val_mse
+    return float("nan")

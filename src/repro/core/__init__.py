@@ -1,10 +1,10 @@
 """Nested Mini-Batch K-Means — the paper's contribution as a JAX module.
 
-Public API:
-    fit(X, k, algorithm=..., rho=..., ...)      host driver (single host)
-    fit_distributed(...)                        shard_map multi-device
+NOTE: the public surface moved to `repro.api` (FitConfig + NestedKMeans
++ Engine backends). What remains here:
     nested_round / mb_round / lloyd_round       pure per-round functions
     init_state / KMeansState / full_mse         state utilities
+    fit(...) / fit_distributed(...)             deprecation shims
 """
 from repro.core.controller import should_grow, sigma_c
 from repro.core.driver import ALGORITHMS, FitResult, fit

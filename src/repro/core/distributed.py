@@ -20,18 +20,34 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import controller, rounds
 from repro.core.state import (ClusterStats, KMeansState, PointState,
-                              RoundInfo, centroid_update, init_state)
-from repro.kernels import ops, ref
+                              RoundInfo)
+from repro.kernels import ops
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs):
+    """`jax.shard_map` across jax versions (with replication checks off).
+
+    jax >= 0.6 exposes `jax.shard_map(..., check_vma=...)`; 0.4.x only
+    has `jax.experimental.shard_map.shard_map(..., check_rep=...)`.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 # --------------------------------------------------------------------------
@@ -55,9 +71,9 @@ def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
     fn = functools.partial(
         rounds.nested_round, b=b_local, rho=rho, bounds=bounds,
         capacity=capacity, use_shalf=use_shalf, data_axes=data_axes)
-    shardmapped = jax.shard_map(
+    shardmapped = shard_map_compat(
         fn, mesh=mesh, in_specs=(P(data_axes, None), state_specs),
-        out_specs=(state_specs, info_specs), check_vma=False)
+        out_specs=(state_specs, info_specs))
     return jax.jit(shardmapped)
 
 
@@ -87,92 +103,29 @@ def fit_distributed(X,
                     seed: int = 0,
                     use_shalf: bool = True,
                     on_round=None):
-    """Multi-device nested mini-batch k-means (tb-rho / gb-rho).
+    """DEPRECATED multi-device entry point — shim over `repro.api`.
 
-    Semantically identical to driver.fit(algorithm="tb") modulo the batch
+    The sharded host loop that used to live here is now
+    `repro.api.engine.run_loop` driving a `MeshEngine`; this wrapper
+    keeps the historical signature and dict telemetry. Semantically
+    identical to driver.fit(algorithm="tb") modulo the batch
     composition: the global batch is the union of equal per-shard
-    prefixes of one global shuffle (vs a global prefix). Both are uniform
-    samples; tests check single-shard equivalence exactly.
+    prefixes of one global shuffle (vs a global prefix). Both are
+    uniform samples; tests check single-shard equivalence exactly.
     """
-    n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
-    rng = np.random.default_rng(seed)
-    X = np.asarray(X)
-    N_real = X.shape[0]
-    pad = -N_real % n_shards
-    if pad:
-        # structural padding at the END of the shuffle: padded rows sit at
-        # the tail of every shard and b_local is capped below them, so
-        # they can never enter a nested prefix. At the b == N limit up to
-        # n_shards-1 trailing shuffle positions go unused (negligible).
-        X = np.concatenate([X, np.repeat(X[:1], pad, axis=0)])
-    N = X.shape[0]
-    perm = np.concatenate([rng.permutation(N_real),
-                           np.arange(N_real, N)])
-    # interleave so shard s gets global-shuffle positions s::n_shards ->
-    # the union of shard prefixes of size b/n_shards IS the global prefix
-    # of size b of the shuffle.
-    Xh = X[perm].reshape(N // n_shards, n_shards, -1).transpose(1, 0, 2)
-    Xd = jax.device_put(jnp.asarray(Xh.reshape(N, -1)),
-                        NamedSharding(mesh, P(data_axes, None)))
-    C0 = jnp.asarray(X[perm[:k]], jnp.float32)
+    from repro import api
 
-    state = init_state(Xd, k, bounds="hamerly2" if bounds == "hamerly2"
-                       else "none" if bounds == "none" else bounds)
-    state = dataclasses.replace(
-        state, stats=dataclasses.replace(state.stats, C=C0))
-    state = shard_state(state, mesh, data_axes)
-
-    b_local = max(1, min(b0, N_real) // n_shards)
-    n_local = N_real // n_shards     # padded tail rows stay inactive
-    capacity: Optional[int] = None
-    telemetry: List[Dict[str, Any]] = []
-    t_work = 0.0
-    converged = False
-
-    for _ in range(max_rounds):
-        t0 = time.perf_counter()
-        while True:
-            round_fn = make_sharded_round(
-                mesh, data_axes, b_local=b_local, rho=rho, bounds=bounds,
-                capacity=capacity, use_shalf=use_shalf)
-            new_state, info = round_fn(Xd, state)
-            if not bool(info.overflow):
-                break
-            capacity = (None if capacity is None
-                        or 2 * capacity >= b_local else 2 * capacity)
-        jax.block_until_ready(new_state.stats.C)
-        t_work += time.perf_counter() - t0
-        state = new_state
-        rec = dict(round=len(telemetry), t=t_work,
-                   b=int(info.n_active),
-                   batch_mse=float(info.batch_mse),
-                   n_changed=int(info.n_changed),
-                   n_recomputed=int(info.n_recomputed),
-                   grow=bool(info.grow), r_median=float(info.r_median))
-        telemetry.append(rec)
-        if on_round:
-            on_round(rec)
-
-        if bounds == "hamerly2":
-            need_local = -(-int(info.n_recomputed) // n_shards)
-            if bool(info.grow) and b_local < n_local:
-                capacity = None
-            else:
-                cap = max(256, 1 << (2 * max(need_local, 1) - 1)
-                          .bit_length())
-                capacity = None if cap >= b_local else cap
-        if bool(info.grow):
-            b_local = min(2 * b_local, n_local)
-        if (int(info.n_active) >= n_local * n_shards
-                and int(info.n_changed) == 0
-                and float(jnp.max(state.stats.p)) == 0.0):
-            converged = True
-            break
-
+    config = api.FitConfig(
+        k=k, algorithm="tb", rho=rho, b0=b0, bounds=bounds,
+        max_rounds=max_rounds, seed=seed, use_shalf=use_shalf,
+        backend="mesh", data_axes=tuple(data_axes),
+        # the pre-api sharded loop used a smaller capacity floor and
+        # declared convergence on the first quiet round
+        capacity_floor=256, converge_patience=1)
+    cb = (lambda rec: on_round(rec.to_dict())) if on_round else None
+    out = api.fit(X, config, mesh=mesh, on_round=cb)
     from repro.core.driver import FitResult
-    return FitResult(C=np.asarray(state.stats.C), state=state,
-                     telemetry=telemetry, converged=converged,
-                     algorithm=f"tb-dist[{bounds}]")
+    return FitResult.from_outcome(out, algorithm=f"tb-dist[{bounds}]")
 
 
 # --------------------------------------------------------------------------
@@ -293,12 +246,11 @@ def make_dp_round(mesh: Mesh, *, use_pallas: bool = False):
     axes = tuple(mesh.axis_names)
     fn = functools.partial(dp_round_body, data_axes=axes,
                            use_pallas=use_pallas)
-    sm = jax.shard_map(
+    sm = shard_map_compat(
         fn, mesh=mesh,
         in_specs=(P(axes, None), P(None, None)),
         out_specs=(P(None, None), P(None, None), P(None),
-                   P(axes), P(axes), P(), P(), P()),
-        check_vma=False)
+                   P(axes), P(axes), P(), P(), P()))
     return jax.jit(sm)
 
 
@@ -316,11 +268,10 @@ def make_xl_round(mesh: Mesh, *, k: int,
 
     fn = functools.partial(xl_round_body, k=k, data_axes=data_axes,
                            model_axis=model_axis)
-    sm = jax.shard_map(
+    sm = shard_map_compat(
         fn, mesh=mesh,
         in_specs=(P(data_axes, None), P(model_axis, None),
                   P(model_axis, None), kshard),
         out_specs=(P(model_axis, None), P(model_axis, None), kshard,
-                   row, row, row, P(), P(), P()),
-        check_vma=False)
+                   row, row, row, P(), P(), P()))
     return jax.jit(sm)

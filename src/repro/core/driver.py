@@ -1,49 +1,32 @@
-"""Host-side k-means driver: bucketed jit, growth schedule, telemetry.
+"""DEPRECATED single-host driver — thin shim over `repro.api`.
 
-Data-dependent batch doubling cannot live inside one jit program, so the
-driver runs a host loop over *bucketed* compiled rounds:
-
-  * the active batch size ``b`` takes values ``b0 * 2^i`` (capped at N) —
-    at most log2(N/b0) distinct shapes ever compile;
-  * the hamerly2 recompute ``capacity`` is likewise a power-of-two bucket,
-    chosen from the previous round's recompute count with 2x slack. A
-    round whose bound-test demand exceeds its capacity returns
-    ``overflow=True`` and is RETRIED from the same input state with a
-    doubled bucket — exactness is never traded for speed.
-
-Each (b, capacity) bucket compiles once; jit's cache keys on the static
-args. Uniform static shapes double as straggler mitigation at scale: every
-shard executes the identical SPMD program.
-
-Wall-clock telemetry excludes validation MSE evaluation, matching the
-paper's experimental protocol (§4.3).
+The host loop that used to live here (bucketed jit, growth schedule,
+capacity bucketing, overflow retry, telemetry) moved to
+`repro.api.engine.run_loop` + `LocalEngine`, where it is shared with the
+shard_map backend. `fit()` keeps the historical kwargs signature and the
+dict-based telemetry records so existing callers and tests keep working;
+new code should use `repro.api.NestedKMeans` / `repro.api.fit`.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rounds
-from repro.core.state import KMeansState, full_mse, init_state
+from repro.core.state import KMeansState
 
-_nested_jit = jax.jit(
-    rounds.nested_round,
-    static_argnames=("b", "rho", "bounds", "capacity", "use_shalf",
-                     "kernel_backend", "data_axes"))
-_mb_jit = jax.jit(rounds.mb_round,
-                  static_argnames=("fixed", "kernel_backend"))
-_lloyd_jit = jax.jit(rounds.lloyd_round, static_argnames=("kernel_backend",))
+__all__ = ["ALGORITHMS", "FitResult", "fit"]
 
+# intentional copy of repro.api.config.ALGORITHMS (a module-level import
+# would create a core <-> api cycle); keep the two literals in sync —
+# tests/test_api.py asserts they match
 ALGORITHMS = ("lloyd", "lloyd-elkan", "mb", "sgd", "mbf", "gb", "tb")
 
 
 @dataclasses.dataclass
 class FitResult:
+    """Legacy result record (telemetry as plain dicts)."""
     C: np.ndarray
     state: KMeansState
     telemetry: List[Dict[str, Any]]
@@ -57,8 +40,16 @@ class FitResult:
                 return rec["val_mse"]
         return float("nan")
 
+    @classmethod
+    def from_outcome(cls, out: "repro.api.FitOutcome",  # noqa: F821
+                     algorithm: Optional[str] = None) -> "FitResult":
+        return cls(C=out.C, state=out.state,
+                   telemetry=[t.to_dict() for t in out.telemetry],
+                   converged=out.converged,
+                   algorithm=algorithm or out.algorithm)
 
-def _next_pow2(x: int) -> int:
+
+def _next_pow2(x: int) -> int:      # kept for backward import compat
     return 1 << max(0, int(x - 1).bit_length())
 
 
@@ -87,131 +78,20 @@ def fit(X,
         on_round: Optional[Callable[[Dict[str, Any]], None]] = None,
         init_C: Optional[np.ndarray] = None,
         ) -> FitResult:
-    """Run one of the paper's algorithms to convergence / budget.
+    """Deprecated: build a `repro.api.FitConfig` and use `NestedKMeans`.
 
-    algorithm: lloyd | mb | sgd (= mb, b=1) | mbf | gb | tb.
-    gb == tb with bounds="none". rho=inf gives gb-inf / tb-inf.
-    Initialisation is the paper's: first k points of the shuffled data.
+    Runs one of the paper's algorithms to convergence / budget through
+    the unified engine loop. Semantics (and centroids) are bit-identical
+    to the pre-api driver.
     """
-    if algorithm not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {algorithm!r}")
-    rng = np.random.default_rng(seed)
-    X = np.asarray(X)
-    N = X.shape[0]
-    perm = rng.permutation(N) if shuffle else np.arange(N)
-    Xd = jnp.asarray(X[perm])
-    Xv = jnp.asarray(X_val) if X_val is not None else None
+    from repro import api
 
-    if algorithm == "sgd":
-        algorithm, b0 = "mb", 1
-    if algorithm == "lloyd-elkan":
-        # Elkan-accelerated Lloyd == the nested engine started at b0=N
-        # with the paper-faithful per-(i,j) bounds (exact, tests assert
-        # identical minima to plain lloyd).
-        algorithm, b0, bounds, rho = "tb", N, "elkan", float("inf")
-    if algorithm == "gb":
-        algorithm, bounds = "tb", "none"
-    if algorithm in ("lloyd", "mb", "mbf"):
-        bounds = "none"
-
-    state = init_state(Xd, k, bounds=bounds)
-    if init_C is not None:       # warm start (checkpoint restart)
-        import dataclasses as _dc
-        state = _dc.replace(state, stats=_dc.replace(
-            state.stats, C=jnp.asarray(init_C, jnp.float32)))
-    telemetry: List[Dict[str, Any]] = []
-    t_work = 0.0          # cumulative compute time, eval excluded
-    b = min(b0, N)
-    capacity: Optional[int] = None
-    mb_pos = 0
-    mb_perm = rng.permutation(N)
-    quiet_rounds = 0
-    converged = False
-
-    def record(info, extra=None):
-        nonlocal telemetry
-        rec = dict(
-            round=len(telemetry), t=t_work, b=int(info.n_active),
-            batch_mse=float(info.batch_mse),
-            n_changed=int(info.n_changed),
-            n_recomputed=int(info.n_recomputed),
-            grow=bool(info.grow), r_median=float(info.r_median),
-            val_mse=None)
-        if extra:
-            rec.update(extra)
-        do_eval = (Xv is not None
-                   and (len(telemetry) % eval_every == 0))
-        if do_eval:
-            rec["val_mse"] = float(full_mse(Xv, state.stats.C))
-        telemetry.append(rec)
-        if on_round:
-            on_round(rec)
-        return rec
-
-    for _ in range(max_rounds):
-        if t_work >= time_budget_s:
-            break
-        t0 = time.perf_counter()
-
-        if algorithm == "lloyd":
-            new_state, info = _lloyd_jit(Xd, state,
-                                         kernel_backend=kernel_backend)
-        elif algorithm in ("mb", "mbf"):
-            if mb_pos + b > N:
-                mb_perm = rng.permutation(N)
-                mb_pos = 0
-            idx = jnp.asarray(mb_perm[mb_pos:mb_pos + b])
-            mb_pos += b
-            new_state, info = _mb_jit(Xd, idx, state,
-                                      fixed=(algorithm == "mbf"),
-                                      kernel_backend=kernel_backend)
-        else:  # tb family (incl. gb via bounds="none")
-            while True:
-                new_state, info = _nested_jit(
-                    Xd, state, b=b, rho=rho, bounds=bounds,
-                    capacity=capacity, use_shalf=use_shalf,
-                    kernel_backend=kernel_backend)
-                if not bool(info.overflow):
-                    break
-                capacity = (None if capacity is None or 2 * capacity >= b
-                            else 2 * capacity)
-
-        jax.block_until_ready(new_state.stats.C)
-        t_work += time.perf_counter() - t0
-        state = new_state
-        record(info)
-
-        if algorithm in ("tb",):
-            if bounds == "hamerly2":
-                need = int(info.n_recomputed)
-                if bool(info.grow) and b < N:
-                    # a doubling adds b new points that always need a full
-                    # pass — start the grown bucket with full recompute
-                    capacity = None
-                else:
-                    capacity = _cap_bucket(need, b)
-            if bool(info.grow):
-                b = min(2 * b, N)
-            if (int(info.n_active) >= N and int(info.n_changed) == 0
-                    and float(jnp.max(state.stats.p)) == 0.0):
-                quiet_rounds += 1
-                if quiet_rounds >= converge_patience:
-                    converged = True
-                    break
-            else:
-                quiet_rounds = 0
-        elif algorithm == "lloyd":
-            if int(info.n_changed) == 0:
-                converged = True
-                break
-
-    # final validation point
-    if Xv is not None:
-        telemetry.append(dict(
-            round=len(telemetry), t=t_work, b=b, batch_mse=None,
-            n_changed=0, n_recomputed=0, grow=False, r_median=None,
-            val_mse=float(full_mse(Xv, state.stats.C))))
-
-    return FitResult(C=np.asarray(state.stats.C), state=state,
-                     telemetry=telemetry, converged=converged,
-                     algorithm=algorithm)
+    config = api.FitConfig(
+        k=k, algorithm=algorithm, rho=rho, b0=b0, bounds=bounds,
+        max_rounds=max_rounds, time_budget_s=time_budget_s, seed=seed,
+        eval_every=eval_every, use_shalf=use_shalf,
+        kernel_backend=kernel_backend, shuffle=shuffle,
+        converge_patience=converge_patience)
+    cb = (lambda rec: on_round(rec.to_dict())) if on_round else None
+    out = api.fit(X, config, X_val=X_val, init_C=init_C, on_round=cb)
+    return FitResult.from_outcome(out)

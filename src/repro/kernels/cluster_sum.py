@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 
 def _cluster_sum_kernel(x_ref, a_ref, w_ref, s_ref, v_ref, *, k: int):
@@ -96,7 +96,7 @@ def cluster_sum_pallas(x: jax.Array, a: jax.Array, k: int, *,
         # (it is only written when d_idx == 0), so the d dimension must be
         # sequential too — revisited output blocks are illegal on parallel
         # dims in Mosaic.
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(x, a, weights)

@@ -1,0 +1,16 @@
+"""Version compatibility for the Pallas TPU API.
+
+Newer jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams`;
+this container's jax (0.4.x) only ships the old name. Every kernel
+imports `CompilerParams` from here so both spellings work.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - very old jax
+    raise ImportError(
+        "neither pltpu.CompilerParams nor pltpu.TPUCompilerParams exists; "
+        "jax is too old for these kernels")

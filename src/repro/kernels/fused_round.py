@@ -27,7 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 
 def _round_kernel(x_ref, c_ref, cn_ref, a_ref, d1_ref, d2_ref, s_ref,
@@ -117,7 +117,7 @@ def fused_round_pallas(x: jax.Array, c: jax.Array, *, bn: int = 256,
             jax.ShapeDtypeStruct((k,), jnp.float32),
             jax.ShapeDtypeStruct((k,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, c, cn)

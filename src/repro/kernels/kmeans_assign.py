@@ -23,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 _NEG_BIG = float("inf")   # python literal: pallas kernels may not capture
                           # traced constants
@@ -111,7 +111,7 @@ def assign_top2_pallas(x: jax.Array, c: jax.Array, *, bn: int = 256,
             jax.ShapeDtypeStruct((np_,), jnp.float32),
             jax.ShapeDtypeStruct((np_,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, c, cn)

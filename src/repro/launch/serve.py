@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve \
         --arch tinyllama-1.1b --reduced --batch 4 --prompt-len 32 \
         --gen 16
+
+With ``--codebook K`` the server also maintains a k-means VQ codebook
+over the token-embedding table through `repro.api` (the unified
+estimator surface): the codebook is fitted once at startup and then
+*streamed* — every served batch's embeddings are folded in with
+`NestedKMeans.partial_fit`, the serving-path primitive for keeping a
+router/dedup codebook fresh under live traffic. Decode output is tagged
+with its codebook cell.
 """
 import argparse
 import time
@@ -12,8 +20,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.api import FitConfig, NestedKMeans
 from repro.models import model as M
 from repro.train import step as tstep
+
+
+def build_codebook(E: np.ndarray, k: int, seed: int) -> NestedKMeans:
+    """Fit the embedding-table codebook through the unified api."""
+    km = NestedKMeans(FitConfig(k=k, algorithm="tb", rho=float("inf"),
+                                b0=min(2 * k, E.shape[0]),
+                                bounds="hamerly2", max_rounds=200,
+                                seed=seed))
+    km.fit(E)
+    return km
 
 
 def main():
@@ -24,6 +43,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--codebook", type=int, default=0, metavar="K",
+                    help="maintain a K-cell VQ codebook over the "
+                         "embedding table via repro.api")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -33,6 +55,16 @@ def main():
     B, P = args.batch, args.prompt_len
     cache_len = P + args.gen + (cfg.encoder.n_ctx
                                 if cfg.family == "vlm" else 0)
+
+    codebook = None
+    if args.codebook:
+        E = np.asarray(params["embed"], np.float32)
+        t0 = time.time()
+        codebook = build_codebook(E, args.codebook, args.seed)
+        print(f"codebook: k={args.codebook} over {E.shape} embeddings "
+              f"in {time.time() - t0:.2f}s "
+              f"(rounds={codebook.n_rounds_}, "
+              f"converged={codebook.converged_})")
 
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, P)))}
     if cfg.family == "encdec":
@@ -65,6 +97,18 @@ def main():
           f"{args.gen - 1} decode steps in {t_decode * 1e3:.1f}ms "
           f"({B * (args.gen - 1) / max(t_decode, 1e-9):.0f} tok/s)")
     print("generated token ids (row 0):", gen[0].tolist())
+
+    if codebook is not None:
+        E = np.asarray(params["embed"], np.float32)
+        # tag output tokens with their codebook cell (router/dedup view)
+        cells = codebook.predict(E[gen[0]])
+        print("codebook cells  (row 0):", cells.tolist())
+        # streaming refinement: fold this batch's served embeddings in
+        served = E[np.unique(gen)]
+        codebook.partial_fit(served)
+        rec = codebook.telemetry_[-1]
+        print(f"codebook partial_fit: +{rec.b} embeddings, "
+              f"{rec.n_changed} reassigned, batch MSE {rec.batch_mse:.5f}")
 
 
 if __name__ == "__main__":

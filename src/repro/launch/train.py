@@ -9,7 +9,10 @@ for the production mesh (this CLI still runs them if you have the
 hardware — the step function is the same one the dry-run compiles).
 Checkpoints save asynchronously every ``--ckpt-every`` steps and training
 resumes from the latest checkpoint if the directory is non-empty
-(fault-tolerant restart).
+(fault-tolerant restart). ``--codebook K`` additionally clusters the
+token-embedding table through `repro.api` at the end of the run — a
+cheap geometry probe (codebook occupancy / VQ error) of what training
+did to the embedding space.
 """
 import argparse
 import time
@@ -39,6 +42,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--codebook", type=int, default=0, metavar="K",
+                    help="cluster the trained embedding table into K "
+                         "cells via repro.api and report VQ stats")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -99,6 +105,16 @@ def main():
         store.save(args.steps, {"params": params, "opt": opt})
         store.wait()
         print(f"final checkpoint at step {args.steps}")
+
+    if args.codebook:
+        from repro.launch.serve import build_codebook
+        E = np.asarray(params["embed"], np.float32)
+        km = build_codebook(E, args.codebook, args.seed)
+        sizes = np.bincount(km.predict(E), minlength=args.codebook)
+        print(f"embedding codebook (k={args.codebook}): "
+              f"VQ-MSE {-km.score(E) / E.shape[0]:.6f} "
+              f"occupancy min={sizes.min()} max={sizes.max()} "
+              f"empty={int((sizes == 0).sum())}")
 
 
 if __name__ == "__main__":

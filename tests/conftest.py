@@ -5,6 +5,13 @@ import pytest
 # (single) device; only launch/dryrun.py forces 512 placeholder devices.
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test, excluded from the scripts/ci_tier1.sh "
+        "fast subset")
+
+
 @pytest.fixture(scope="session")
 def blobs():
     from repro.data.synthetic import gaussian_blobs

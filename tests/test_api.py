@@ -1,0 +1,247 @@
+"""The unified `repro.api` surface: config, engines, estimator.
+
+Key guarantees:
+  * FitConfig validates and round-trips through JSON-safe dicts;
+  * NestedKMeans.fit == legacy driver.fit BIT-IDENTICALLY (centroids
+    and telemetry) — the refactor moved the loop, not the math;
+  * partial_fit is exactly one nested_round on the streamed batch;
+  * the shared loop serves every legacy algorithm alias.
+"""
+import dataclasses
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import driver, rounds
+from repro.core.state import init_state
+
+
+# ---------------------------------------------------------------------------
+# FitConfig
+# ---------------------------------------------------------------------------
+
+def test_fitconfig_roundtrip_through_json():
+    cfg = api.FitConfig(k=50, algorithm="tb", rho=math.inf, b0=2000,
+                        bounds="hamerly2", time_budget_s=30.0, seed=3,
+                        kernel_backend="ref", data_axes=("pod", "data"))
+    wire = json.dumps(cfg.to_dict())      # must be strict JSON (inf-safe)
+    assert "Infinity" not in wire
+    back = api.FitConfig.from_dict(json.loads(wire))
+    assert back == cfg
+    assert back.rho == math.inf and back.data_axes == ("pod", "data")
+
+
+def test_fitconfig_defaults_roundtrip():
+    cfg = api.FitConfig(k=8)
+    assert api.FitConfig.from_dict(cfg.to_dict()) == cfg
+
+
+@pytest.mark.parametrize("bad", [
+    dict(k=0),
+    dict(k=8, algorithm="kmeans++"),
+    dict(k=8, bounds="yinyang"),
+    dict(k=8, b0=0),
+    dict(k=8, rho=0.0),
+    dict(k=8, eval_every=0),
+    dict(k=8, kernel_backend="cuda"),
+    dict(k=8, backend="tpu-pod"),
+    dict(k=8, backend="mesh", algorithm="mb"),   # mesh is nested-only
+    dict(k=8, backend="mesh", bounds="elkan"),   # elkan state not sharded
+])
+def test_fitconfig_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        api.FitConfig(**bad)
+
+
+def test_fitconfig_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown"):
+        api.FitConfig.from_dict({"k": 8, "banana": 1})
+
+
+def test_fitconfig_resolve_aliases():
+    n = 1000
+    assert api.FitConfig(k=4, algorithm="sgd").resolve(n).b0 == 1
+    le = api.FitConfig(k=4, algorithm="lloyd-elkan").resolve(n)
+    assert (le.algorithm, le.b0, le.bounds) == ("tb", n, "elkan")
+    gb = api.FitConfig(k=4, algorithm="gb").resolve(n)
+    assert (gb.algorithm, gb.bounds) == ("tb", "none")
+    assert api.FitConfig(k=4, algorithm="mb").resolve(n).bounds == "none"
+
+
+# ---------------------------------------------------------------------------
+# estimator vs legacy driver: bit-identical
+# ---------------------------------------------------------------------------
+
+def test_fit_bit_identical_to_legacy_driver(blobs, blobs_val):
+    """tb-inf through NestedKMeans == driver.fit: same centroids bits,
+    same telemetry stream."""
+    X, _ = blobs
+    k = 8
+    legacy = driver.fit(X, k, algorithm="tb", rho=math.inf, b0=512,
+                        bounds="hamerly2", X_val=blobs_val, max_rounds=40,
+                        eval_every=5, seed=0)
+    km = api.NestedKMeans(api.FitConfig(
+        k=k, algorithm="tb", rho=math.inf, b0=512, bounds="hamerly2",
+        max_rounds=40, eval_every=5, seed=0)).fit(X, X_val=blobs_val)
+    np.testing.assert_array_equal(legacy.C, km.cluster_centers_)
+    assert legacy.converged == km.converged_
+    assert len(legacy.telemetry) == km.n_rounds_
+    for old, new in zip(legacy.telemetry, km.telemetry_):
+        d = new.to_dict()
+        # t is wall-clock (jit compile lands in whichever runs first)
+        assert {k: v for k, v in old.items() if k != "t"} \
+            == {k: v for k, v in d.items() if k != "t"}
+
+
+def test_fit_bit_identical_mb_and_lloyd(blobs):
+    """The resampling stream (mb) and lloyd paths also moved intact."""
+    X, _ = blobs
+    for algo, kw in [("mb", dict(b0=256)), ("mbf", dict(b0=256)),
+                     ("lloyd", {})]:
+        legacy = driver.fit(X, 8, algorithm=algo, max_rounds=15, seed=2,
+                            **kw)
+        out = api.fit(X, api.FitConfig(k=8, algorithm=algo, max_rounds=15,
+                                       seed=2, **kw))
+        np.testing.assert_array_equal(legacy.C, out.C), algo
+
+
+def test_callback_streams_telemetry(blobs):
+    X, _ = blobs
+    seen = []
+    api.fit(X, api.FitConfig(k=8, b0=512, max_rounds=8, seed=0),
+            on_round=seen.append)
+    assert len(seen) == 8
+    assert all(isinstance(r, api.Telemetry) for r in seen)
+    assert [r.round for r in seen] == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# estimator inference surface
+# ---------------------------------------------------------------------------
+
+def test_predict_transform_score(blobs, blobs_val):
+    X, centers = blobs
+    k = centers.shape[0]
+    km = api.NestedKMeans(api.FitConfig(k=k, b0=512, max_rounds=60,
+                                        seed=0)).fit(X)
+    a = km.predict(blobs_val)
+    D = km.transform(blobs_val)
+    assert a.shape == (len(blobs_val),) and D.shape == (len(blobs_val), k)
+    # predict is argmin of transform
+    np.testing.assert_array_equal(a, np.argmin(D, axis=1))
+    # score == -sum of squared nearest distances
+    np.testing.assert_allclose(-km.score(blobs_val),
+                               (D.min(axis=1) ** 2).sum(), rtol=1e-4)
+
+
+def test_unfitted_estimator_raises(blobs_val):
+    km = api.NestedKMeans(api.FitConfig(k=4))
+    with pytest.raises(api.NotFittedError):
+        km.predict(blobs_val)
+
+
+def test_labels_are_in_caller_row_order(blobs):
+    """The engines shuffle internally; labels_ must come back in the
+    caller's row order (== predict with the final centroids once
+    converged)."""
+    X, _ = blobs
+    km = api.NestedKMeans(api.FitConfig(k=8, b0=512, max_rounds=80,
+                                        seed=0)).fit(X)
+    assert km.converged_
+    labels = km.labels_
+    assert labels.shape == (len(X),) and labels.min() >= 0
+    np.testing.assert_array_equal(labels, km.predict(X))
+
+
+def test_legacy_algorithms_list_matches_api():
+    assert driver.ALGORITHMS == api.ALGORITHMS
+
+
+def test_partial_fit_rejects_mesh_backend():
+    km = api.NestedKMeans(
+        api.FitConfig(k=4, backend="mesh"),
+        engine=api.LocalEngine())   # engine injected; config still mesh
+    with pytest.raises(NotImplementedError, match="local"):
+        km.partial_fit(np.zeros((8, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# partial_fit: the streaming primitive
+# ---------------------------------------------------------------------------
+
+def test_partial_fit_is_one_nested_round(blobs):
+    """partial_fit on a fitted estimator == one nested_round whose stats
+    are the estimator's and whose points are the fresh batch."""
+    X, _ = blobs
+    k = 8
+    km = api.NestedKMeans(api.FitConfig(k=k, b0=512, max_rounds=30,
+                                        seed=0)).fit(X[:2048])
+    batch = X[2048:2048 + 256]
+
+    # oracle: the same round by hand
+    Xd = jnp.asarray(batch)
+    state = init_state(Xd, k, bounds="hamerly2")
+    state = dataclasses.replace(state, stats=km.outcome_.state.stats)
+    want, want_info = rounds.nested_round(
+        Xd, state, b=256, rho=math.inf, bounds="hamerly2", capacity=None,
+        use_shalf=True)
+
+    n_before = km.n_rounds_
+    km.partial_fit(batch)
+    np.testing.assert_array_equal(np.asarray(want.stats.C),
+                                  km.cluster_centers_)
+    rec = km.telemetry_[-1]
+    assert km.n_rounds_ == n_before + 1
+    assert rec.b == 256
+    assert rec.n_changed == int(want_info.n_changed)
+    assert rec.batch_mse == pytest.approx(float(want_info.batch_mse))
+
+
+def test_partial_fit_from_scratch_then_stream(blobs):
+    """partial_fit bootstraps without fit() and keeps absorbing batches."""
+    X, _ = blobs
+    km = api.NestedKMeans(api.FitConfig(k=8))
+    for i in range(4):
+        km.partial_fit(X[i * 512:(i + 1) * 512])
+    assert km.n_rounds_ == 4
+    assert km.cluster_centers_.shape == (8, X.shape[1])
+    # all four batches are in the running statistics
+    assert km.counts_.sum() == pytest.approx(4 * 512)
+    a = km.predict(X[:512])
+    assert a.min() >= 0 and a.max() < 8
+
+
+def test_partial_fit_first_batch_must_cover_k():
+    with pytest.raises(ValueError, match=">= k"):
+        api.NestedKMeans(api.FitConfig(k=64)).partial_fit(
+            np.zeros((8, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# engines
+# ---------------------------------------------------------------------------
+
+def test_make_engine_selects_backend():
+    assert isinstance(api.make_engine(api.FitConfig(k=4)),
+                      api.LocalEngine)
+    with pytest.raises(ValueError, match="mesh"):
+        api.make_engine(api.FitConfig(k=4, backend="mesh"))
+
+
+def test_run_loop_time_budget_zero(blobs):
+    X, _ = blobs
+    out = api.fit(X, api.FitConfig(k=8, time_budget_s=0.0))
+    assert out.telemetry == [] and not out.converged
+
+
+def test_outcome_carries_config(blobs):
+    X, _ = blobs
+    cfg = api.FitConfig(k=8, algorithm="gb", b0=256, max_rounds=10)
+    out = api.fit(X, cfg)
+    # outcome records the RESOLVED config (canonical algorithm)
+    assert out.config.algorithm == "tb" and out.config.bounds == "none"
+    assert out.config.k == 8

@@ -7,6 +7,10 @@ import pytest
 from repro import configs
 from repro.models import model as M
 
+# ~2.5 min of per-arch compiles: full tier-1 only (scripts/ci_tier1.sh
+# runs the fast subset without these)
+pytestmark = pytest.mark.slow
+
 
 def make_batch(cfg, B=2, S=32, seed=0):
     rng = np.random.default_rng(seed)

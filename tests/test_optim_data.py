@@ -87,8 +87,14 @@ def test_lm_batches_seekable():
     np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
 
 
+@pytest.mark.slow
 def test_distributed_engine_subprocess():
-    """Multi-device shard_map equivalence (8 forced host devices)."""
+    """Multi-device shard_map equivalence (8 forced host devices).
+
+    Deterministic by construction: the subprocess forces 8 host devices
+    via XLA_FLAGS and every RNG in the smoke script is explicitly
+    seeded, so the distributed-vs-single-host comparison is stable.
+    """
     import subprocess, sys, os
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

@@ -1,10 +1,16 @@
-"""Hypothesis property tests on the engine's invariants."""
+"""Hypothesis property tests on the engine's invariants.
+
+hypothesis is an optional dev dependency (see requirements-dev.txt);
+without it this module skips instead of aborting collection.
+"""
 import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import controller, rounds
 from repro.core.state import init_state
