@@ -2,12 +2,21 @@
 
 One module per paper table/figure + the pruning study + the dry-run
 roofline summary. Exit code 0 iff every qualitative claim check passes.
+
+Every `api.fit` a suite executes is recorded: the RESOLVED
+`FitConfig.to_dict()` manifest of each run is written to
+``artifacts/bench/manifests.json``, so any number in any table can be
+reproduced with `FitConfig.from_dict` + the same dataset.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
 
 def main() -> int:
@@ -19,6 +28,20 @@ def main() -> int:
                          "roofline")
     args = ap.parse_args()
     quick = not args.full
+
+    # record the exact FitConfig of every fit the suites run
+    from repro import api
+    manifests: list[dict] = []
+    current = {"suite": None}
+    orig_fit = api.fit
+
+    def recording_fit(X, config, **kw):
+        out = orig_fit(X, config, **kw)
+        manifests.append({"suite": current["suite"],
+                          "config": out.config.to_dict()})
+        return out
+
+    api.fit = recording_fit
 
     from benchmarks import (fig1_mse_vs_time, fig2_rho_effect,
                             pruning_effectiveness, roofline_report,
@@ -33,12 +56,22 @@ def main() -> int:
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     ok = True
-    for name in chosen:
-        t0 = time.time()
-        res = suites[name](quick=quick)
-        ok &= bool(res)
-        print(f"[{name}] {'ok' if res else 'CLAIM-CHECK-FAILED'} "
-              f"({time.time() - t0:.0f}s)\n")
+    try:
+        for name in chosen:
+            current["suite"] = name
+            t0 = time.time()
+            res = suites[name](quick=quick)
+            ok &= bool(res)
+            print(f"[{name}] {'ok' if res else 'CLAIM-CHECK-FAILED'} "
+                  f"({time.time() - t0:.0f}s)\n")
+    finally:
+        api.fit = orig_fit
+        if manifests:
+            ART.mkdir(parents=True, exist_ok=True)
+            (ART / "manifests.json").write_text(json.dumps(
+                {"quick": quick, "runs": manifests}, indent=1))
+            print(f"wrote {len(manifests)} FitConfig manifests to "
+                  f"{ART / 'manifests.json'}")
     print(f"benchmarks: {'ALL CLAIMS PASS' if ok else 'SOME CLAIMS FAILED'}")
     return 0 if ok else 1
 

@@ -35,9 +35,40 @@ def main(quick: bool = True):
                    "points_per_s": n / t, "gflops": flops / t / 1e9}
         print(f"  {ds:9s} N={n} d={d}: {t:.2f}s/pass "
               f"({n / t:,.0f} pts/s, {flops / t / 1e9:.1f} GFLOP/s)")
+
+    # host-loop round rate of the nested (tb) path. This is the number
+    # the p_max-in-RoundInfo change protects: the convergence check must
+    # read already-materialized info, never dispatch an extra
+    # device->host sync per round. Compared against the previous
+    # artifact (if any) as a coarse non-regression gate.
+    ok = True
+    X, _ = common.dataset("infmnist", quick)
+    res = api.fit(X, api.FitConfig(
+        k=50, algorithm="tb", b0=2048, max_rounds=60,
+        eval_every=10 ** 9, seed=0))
+    n_rounds, t = len(res.telemetry), res.telemetry[-1].t
+    rps = n_rounds / max(t, 1e-9)
+    out["tb_loop"] = {"rounds": n_rounds, "seconds": t,
+                      "rounds_per_s": rps}
+    print(f"  tb host loop: {n_rounds} rounds in {t:.2f}s "
+          f"({rps:.1f} rounds/s)")
+    prev_file = ART / "table1.json"
+    if prev_file.exists():
+        prev = json.loads(prev_file.read_text()) \
+            .get("tb_loop", {}).get("rounds_per_s")
+        if prev:
+            ok = rps >= 0.5 * prev
+            print(f"  vs previous artifact {prev:.1f} rounds/s: "
+                  f"{'ok' if ok else 'REGRESSED >2x'}")
+            if not ok:
+                # keep the old baseline so the gate can't self-heal by
+                # overwriting it with the regressed number
+                out["tb_loop"]["rounds_per_s"] = prev
+                out["tb_loop"]["regressed_rounds_per_s"] = rps
+
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "table1.json").write_text(json.dumps(out, indent=1))
-    return True
+    return ok
 
 
 if __name__ == "__main__":

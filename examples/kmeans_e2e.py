@@ -6,8 +6,11 @@ unified `repro.api` surface:
   * the same FitConfig driving the LocalEngine or the MeshEngine
     (shard_map; run with
     XLA_FLAGS=--xla_force_host_platform_device_count=8 for 8 shards),
-  * checkpoint mid-run + elastic restart (FitConfig round-trips
-    through the checkpoint manifest),
+  * IN-LOOP checkpointing + kill-and-resume: `run_loop` saves the full
+    host-schedule state (S/v statistics, batch-growth position,
+    patience, work clock, telemetry) every N rounds, so the resumed fit
+    is bit-identical to an uninterrupted one — not a warm start that
+    discards the nested statistics,
   * validation MSE telemetry.
 
     PYTHONPATH=src python examples/kmeans_e2e.py
@@ -16,15 +19,12 @@ unified `repro.api` surface:
 """
 import argparse
 import dataclasses
-import json
 import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.api import FitConfig, NestedKMeans
-from repro.checkpoint.store import CheckpointStore
+from repro.api import CheckpointConfig, FitConfig, NestedKMeans
 from repro.core.state import full_mse
 from repro.data.synthetic import infmnist_like
 
@@ -54,31 +54,31 @@ def main():
         print(f"val MSE {mse:.5f}")
         return
 
-    # single-host run with mid-run checkpoint + elastic restart
+    # single-host run with in-loop checkpointing + kill-and-resume
     with tempfile.TemporaryDirectory() as d:
-        store = CheckpointStore(d, keep=2)
+        ck = CheckpointConfig(checkpoint_dir=d, save_every=4, keep=2)
         cfg = FitConfig(k=k, algorithm="tb", b0=2048, bounds="hamerly2",
-                        max_rounds=12, seed=0)
+                        max_rounds=200, eval_every=10, seed=0,
+                        checkpoint=ck)
 
-        # phase 1: run 12 rounds, then "crash". The config itself rides
-        # along in the manifest (to_dict/from_dict round-trip).
-        km1 = NestedKMeans(cfg).fit(X_train)
-        store.save(12, {"C": jnp.asarray(km1.cluster_centers_),
-                        "b": jnp.asarray(km1.telemetry_[-1].b)})
-        manifest = json.dumps(cfg.to_dict())
-        print(f"phase-1: {km1.n_rounds_} rounds; checkpointed; "
-              f"b={km1.telemetry_[-1].b}")
+        # phase 1: the fit "crashes" after 12 rounds. Every save_every
+        # rounds run_loop wrote the FULL loop state — KMeansState (S/v,
+        # bounds), current b, capacity bucket, patience, work clock,
+        # telemetry — alongside the FitConfig.to_dict() manifest.
+        km1 = NestedKMeans(dataclasses.replace(cfg, max_rounds=12))
+        km1.fit(X_train)
+        print(f"phase-1: {km1.n_rounds_} rounds, then 'crash'; "
+              f"checkpointed b={km1.telemetry_[-1].b}")
 
-        # phase 2: restart from the checkpoint (warm centroids + batch)
-        got = store.restore({"C": jnp.zeros((k, X.shape[1])),
-                             "b": jnp.zeros((), jnp.int32)})
-        cfg2 = dataclasses.replace(
-            FitConfig.from_dict(json.loads(manifest)),
-            b0=int(got["b"]), max_rounds=200, eval_every=10)
-        km2 = NestedKMeans(cfg2).fit(X_train, X_val=X_val,
-                                     init_C=np.asarray(got["C"]))
-        print(f"phase-2 (restarted): converged={km2.converged_} "
-              f"final MSE={km2.final_mse_:.5f}")
+        # phase 2: resume. The restored fit continues the growth
+        # schedule bit-identically to an uninterrupted run (same
+        # centroids, same telemetry) — and the restore is elastic: the
+        # same checkpoint also resumes on a mesh at any shard count.
+        km2 = NestedKMeans(cfg)
+        km2.fit(X_train, X_val=X_val, resume=True)
+        print(f"phase-2 (resumed at round {km1.n_rounds_}): "
+              f"converged={km2.converged_} after {km2.n_rounds_} total "
+              f"rounds, final MSE={km2.final_mse_:.5f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,93 @@
+"""Dev smoke: mesh kill-and-resume + tail-row fix (run via subprocess).
+
+Forces host devices so the MeshEngine runs 2 data shards, with a
+dataset size that is NOT a multiple of the shard count:
+  * a converged mesh fit labels EVERY real row (the tail rows of the
+    low shards used to come back -1) and n_active == N_real;
+  * a fit checkpointed mid-run and resumed on the SAME shard count is
+    bit-identical (centroids + telemetry minus wall-clock) to an
+    uninterrupted run;
+  * the same checkpoint restores elastically onto a different shard
+    count and onto the LocalEngine, converging to the same quality.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core.state import full_mse
+
+rng = np.random.default_rng(0)
+k, d, n = 8, 16, 4001            # 4001 % 2 != 0: tail rows exist
+centers = rng.normal(size=(k, d)) * 5
+X = (centers[rng.integers(0, k, n)]
+     + rng.normal(size=(n, d))).astype(np.float32)
+
+mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+cfg = api.FitConfig(k=k, algorithm="tb", b0=512, max_rounds=80, seed=1,
+                    backend="mesh", data_axes=("data",),
+                    capacity_floor=256)
+
+# -- tail-row fix: every real row labeled on non-divisible N -------------
+out = api.fit(X, cfg, mesh=mesh2)
+assert out.converged
+n_unlabeled = int((out.labels < 0).sum())
+assert n_unlabeled == 0, f"{n_unlabeled} real rows never labeled"
+assert out.telemetry[-1].b == n, out.telemetry[-1].b
+print(f"tail-row fix: converged, all {n} rows labeled, "
+      f"n_active == {out.telemetry[-1].b}")
+
+with tempfile.TemporaryDirectory() as ckdir:
+    ck = api.CheckpointConfig(checkpoint_dir=ckdir, save_every=4)
+
+    # -- kill at round 9, resume on the SAME 2 shards: bit-identical -----
+    api.fit(X, dataclasses.replace(cfg, max_rounds=9, checkpoint=ck),
+            mesh=mesh2)
+    km = api.NestedKMeans(dataclasses.replace(cfg, checkpoint=ck),
+                          mesh=mesh2)
+    km.fit(X, resume=True)
+    np.testing.assert_array_equal(out.C, km.cluster_centers_)
+    assert len(out.telemetry) == len(km.telemetry_)
+    for ra, rb in zip(out.telemetry, km.telemetry_):
+        da, db = ra.to_dict(), rb.to_dict()
+        da.pop("t"), db.pop("t")        # wall-clock differs across runs
+        assert da == db, (da, db)
+    print(f"same-shard resume: bit-identical over "
+          f"{len(out.telemetry)} telemetry rounds")
+
+mse_a = float(full_mse(jnp.asarray(X), jnp.asarray(out.C)))
+
+with tempfile.TemporaryDirectory() as ckdir:
+    ck = api.CheckpointConfig(checkpoint_dir=ckdir, save_every=4)
+    api.fit(X, dataclasses.replace(cfg, max_rounds=9, checkpoint=ck),
+            mesh=mesh2)
+
+    # -- elastic: the 2-shard checkpoint resumes on 4 shards -------------
+    mesh4 = jax.make_mesh((4, 1), ("data", "model"))
+    km4 = api.NestedKMeans(dataclasses.replace(cfg, checkpoint=ck),
+                           mesh=mesh4)
+    km4.fit(X, resume=True)
+    assert km4.converged_ and (km4.outcome_.labels >= 0).all()
+    mse4 = float(full_mse(jnp.asarray(X),
+                          jnp.asarray(km4.cluster_centers_)))
+    assert abs(mse_a - mse4) / mse_a < 0.05, (mse_a, mse4)
+    print(f"elastic 2->4 shard resume: converged, mse {mse4:.5f} "
+          f"(uninterrupted {mse_a:.5f})")
+
+    # -- elastic: the same checkpoint resumes on the LocalEngine ---------
+    kml = api.NestedKMeans(dataclasses.replace(
+        cfg, backend="local", checkpoint=ck))
+    kml.fit(X, resume=True)
+    assert kml.converged_
+    msel = float(full_mse(jnp.asarray(X),
+                          jnp.asarray(kml.cluster_centers_)))
+    assert abs(mse_a - msel) / mse_a < 0.05, (mse_a, msel)
+    print(f"elastic mesh->local resume: converged, mse {msel:.5f}")
+
+print("resume-mesh smoke OK")

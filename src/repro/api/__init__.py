@@ -23,7 +23,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.api.config import ALGORITHMS, BACKENDS, BOUNDS, FitConfig
+from repro.api.config import (ALGORITHMS, BACKENDS, BOUNDS,
+                              CheckpointConfig, FitConfig)
 from repro.api.engine import (Engine, EngineRun, FitOutcome, LocalEngine,
                               MeshEngine, cap_bucket, make_engine, next_pow2,
                               run_loop)
@@ -41,7 +42,8 @@ def fit(X, config: FitConfig, *, X_val=None, mesh=None,
 
 
 __all__ = [
-    "FitConfig", "NestedKMeans", "NotFittedError", "fit",
+    "FitConfig", "CheckpointConfig", "NestedKMeans", "NotFittedError",
+    "fit",
     "Engine", "EngineRun", "LocalEngine", "MeshEngine", "make_engine",
     "run_loop", "FitOutcome", "Telemetry", "RoundCallback",
     "final_val_mse", "cap_bucket", "next_pow2",

@@ -34,6 +34,45 @@ def _dec_float(x: Any) -> float:
 
 
 @dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """In-loop checkpointing policy for `repro.api.engine.run_loop`.
+
+    Attributes:
+      checkpoint_dir  directory for the `CheckpointStore` (created on
+                      first save).
+      save_every      save the full loop state every N host rounds (a
+                      final save always happens at loop exit).
+      keep            keep-N garbage collection of old steps.
+      background      snapshot to host RAM synchronously, write to disk
+                      on a worker thread (the loop keeps dispatching).
+    """
+    checkpoint_dir: str
+    save_every: int = 10
+    keep: int = 3
+    background: bool = False
+
+    def __post_init__(self):
+        if not self.checkpoint_dir:
+            raise ValueError("checkpoint_dir must be a non-empty path")
+        if self.save_every < 1:
+            raise ValueError(f"save_every must be >= 1, got "
+                             f"{self.save_every}")
+        if self.keep < 1:
+            raise ValueError(f"keep must be >= 1, got {self.keep}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CheckpointConfig":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(
+                f"unknown CheckpointConfig fields: {sorted(unknown)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class FitConfig:
     """Everything a fit needs besides the data and the execution engine.
 
@@ -56,6 +95,9 @@ class FitConfig:
       seed        numpy PRNG seed for shuffle + mb resampling.
       backend     "local" (single process) | "mesh" (shard_map engine).
       data_axes   mesh axes the points are row-sharded over (mesh only).
+      checkpoint  optional `CheckpointConfig`: save the full loop state
+                  every N rounds so the fit can be killed and resumed
+                  (see `NestedKMeans.fit(resume=True)`).
     """
     k: int
     algorithm: str = "tb"
@@ -73,8 +115,12 @@ class FitConfig:
     seed: int = 0
     backend: str = "local"
     data_axes: Tuple[str, ...] = ("data",)
+    checkpoint: Optional[CheckpointConfig] = None
 
     def __post_init__(self):
+        if isinstance(self.checkpoint, dict):
+            object.__setattr__(self, "checkpoint",
+                               CheckpointConfig.from_dict(self.checkpoint))
         if not isinstance(self.k, int) or self.k < 1:
             raise ValueError(f"k must be a positive int, got {self.k!r}")
         if self.algorithm not in ALGORITHMS:
@@ -143,6 +189,8 @@ class FitConfig:
         d["rho"] = _enc_float(self.rho)
         d["time_budget_s"] = _enc_float(self.time_budget_s)
         d["data_axes"] = list(self.data_axes)
+        if self.checkpoint is not None:
+            d["checkpoint"] = self.checkpoint.to_dict()
         return d
 
     @classmethod

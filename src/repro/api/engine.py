@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Protocol, Tuple, runtime_checkable
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Protocol, Tuple, Union, \
+    runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +30,10 @@ import numpy as np
 
 from repro.api.config import FitConfig
 from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
+from repro.checkpoint.store import CheckpointStore
 from repro.core import rounds
-from repro.core.state import KMeansState, RoundInfo, full_mse, init_state
+from repro.core.state import (ElkanBounds, KMeansState, PointState,
+                              RoundInfo, full_mse, init_state)
 
 
 # --------------------------------------------------------------------------
@@ -119,6 +123,25 @@ class EngineRun:
         """Validation MSE of the current centroids (None: no val set)."""
         return None
 
+    # -- checkpointing (canonical = global-shuffle row order) ---------------
+
+    def capture(self, state: KMeansState) -> Tuple[Dict[str, Any],
+                                                   Dict[str, Any]]:
+        """(host pytree, JSON-safe engine meta) for a checkpoint.
+
+        Per-point arrays are returned in CANONICAL order — the position
+        of each real row in the seed-determined global shuffle, pads
+        dropped. The canonical layout depends only on (seed, N_real), so
+        a checkpoint written by any engine at any shard count restores
+        onto any other (elastic restart).
+        """
+        raise NotImplementedError
+
+    def restore(self, store: "CheckpointStore", step: int,
+                meta: Dict[str, Any]) -> KMeansState:
+        """Rebuild an engine-layout state from a canonical checkpoint."""
+        raise NotImplementedError
+
 
 @runtime_checkable
 class Engine(Protocol):
@@ -135,13 +158,24 @@ class Engine(Protocol):
 # --------------------------------------------------------------------------
 
 def run_loop(run: EngineRun, config: FitConfig, *,
-             on_round: Optional[RoundCallback] = None) -> FitOutcome:
+             on_round: Optional[RoundCallback] = None,
+             resume_from: Optional[Union[str, Path, CheckpointStore]] = None
+             ) -> FitOutcome:
     """Growth schedule + capacity bucketing + overflow retry + patience.
 
     ``config`` must already be `resolve()`d (no alias algorithms). The
     loop is backend-agnostic: every quantity it branches on comes from
     the (psum-reduced, hence shard-replicated) RoundInfo, so the same
     schedule drives one device or a pod mesh.
+
+    When ``config.checkpoint`` is set, the FULL loop state — engine
+    state, batch size, capacity bucket, patience counter, work clock and
+    telemetry — is saved atomically every ``save_every`` rounds (plus
+    once at loop exit) alongside the ``config.to_dict()`` manifest.
+    ``resume_from`` (a directory or `CheckpointStore`) restores the
+    latest such checkpoint through the engine's canonical layout, so a
+    killed fit continues bit-identically — and a fit checkpointed on
+    one shard count resumes on another (elastic restart).
     """
     algorithm = config.algorithm
     bounds = config.bounds
@@ -152,6 +186,49 @@ def run_loop(run: EngineRun, config: FitConfig, *,
     t_work = 0.0
     quiet_rounds = 0
     converged = False
+    start_round = 0
+
+    ckpt = config.checkpoint
+    store = (CheckpointStore(ckpt.checkpoint_dir, keep=ckpt.keep)
+             if ckpt is not None else None)
+
+    if store is not None and resume_from is None \
+            and store.latest_step() is not None:
+        # a FRESH checkpointed fit supersedes whatever run lives in the
+        # directory: left in place, the old (higher-numbered) steps
+        # would garbage-collect this run's early saves on arrival and a
+        # later resume would silently restore the stale fit
+        store.clear()
+
+    if resume_from is not None:
+        rstore = (resume_from if isinstance(resume_from, CheckpointStore)
+                  else CheckpointStore(resume_from,
+                                       keep=ckpt.keep if ckpt else 3))
+        step = rstore.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"resume_from={resume_from!r} holds no checkpoints")
+        extra = rstore.read_extra(step)
+        if not extra or "loop" not in extra:
+            raise ValueError(
+                f"checkpoint step {step} has no loop metadata; it was "
+                f"not written by run_loop")
+        emeta, loop = extra["engine"], extra["loop"]
+        state = run.restore(rstore, step, emeta)
+        telemetry = [Telemetry.from_dict(r) for r in extra["telemetry"]]
+        t_work = float(loop["t_work"])
+        quiet_rounds = int(loop["quiet_rounds"])
+        converged = bool(loop.get("converged", False))
+        start_round = int(loop["rounds_done"])
+        # b is stored in GLOBAL rows; ceil-divide onto this engine's
+        # shard count so every previously-seen point stays inside the
+        # prefix when the shard count changed across the restore.
+        b = max(1, min(-(-int(loop["b_global"]) // run.n_shards),
+                       run.b_max))
+        cap = loop.get("capacity")
+        capacity = (int(cap) if cap is not None
+                    and int(emeta.get("n_shards", 0)) == run.n_shards
+                    else None)
 
     def record(info: RoundInfo) -> None:
         rec = Telemetry(
@@ -166,7 +243,23 @@ def run_loop(run: EngineRun, config: FitConfig, *,
         if on_round:
             on_round(rec)
 
-    for _ in range(config.max_rounds):
+    def save_checkpoint() -> None:
+        tree, emeta = run.capture(state)
+        extra = {
+            "config": config.to_dict(),
+            "engine": emeta,
+            "loop": {"rounds_done": len(telemetry),
+                     "b_global": b * run.n_shards, "capacity": capacity,
+                     "quiet_rounds": quiet_rounds, "t_work": t_work,
+                     "converged": converged},
+            "telemetry": [r.to_dict() for r in telemetry],
+        }
+        store.save(len(telemetry), tree, extra=extra,
+                   background=ckpt.background)
+
+    for _ in range(start_round, config.max_rounds):
+        if converged:        # resumed an already-finished fit
+            break
         if t_work >= config.time_budget_s:
             break
         t0 = time.perf_counter()
@@ -201,9 +294,11 @@ def run_loop(run: EngineRun, config: FitConfig, *,
                     capacity = cap_bucket(need, b, config.capacity_floor)
             if bool(info.grow):
                 b = min(2 * b, run.b_max)
+            # p_max rides along in the psum-consistent RoundInfo — no
+            # extra device->host sync outside the timed region
             if (int(info.n_active) >= run.n_active_target
                     and int(info.n_changed) == 0
-                    and float(jnp.max(state.stats.p)) == 0.0):
+                    and float(info.p_max) == 0.0):
                 quiet_rounds += 1
                 if quiet_rounds >= config.converge_patience:
                     converged = True
@@ -215,8 +310,21 @@ def run_loop(run: EngineRun, config: FitConfig, *,
                 converged = True
                 break
 
-    # final validation point (outside the timed region, like every eval)
-    final = run.eval_mse(state)
+        if store is not None and len(telemetry) % ckpt.save_every == 0:
+            save_checkpoint()
+
+    if store is not None:
+        # one final save so a resumed-after-finish fit is a no-op loop
+        save_checkpoint()
+        store.wait()
+
+    # final validation point (outside the timed region, like every eval),
+    # unless the last in-loop round already evaluated validation — a
+    # second eval at the same t would double-count it in the telemetry
+    if telemetry and telemetry[-1].val_mse is not None:
+        final = None
+    else:
+        final = run.eval_mse(state)
     if final is not None:
         telemetry.append(Telemetry(
             round=len(telemetry), t=t_work, b=b * run.n_shards,
@@ -301,6 +409,53 @@ class _LocalRun(EngineRun):
             return None
         return float(full_mse(self._Xv, state.stats.C))
 
+    # -- checkpointing ------------------------------------------------------
+    # storage row i holds shuffle position i, so storage order IS the
+    # canonical order for the local engine.
+
+    def capture(self, state):
+        tree = {
+            "stats": jax.tree.map(np.asarray, state.stats),
+            "a": np.asarray(state.points.a),
+            "d": np.asarray(state.points.d),
+            "lb": np.asarray(state.points.lb),
+            "round": np.asarray(state.round),
+            "mb_perm": np.asarray(self._mb_perm),
+        }
+        if state.elkan is not None:
+            tree["elkan_l"] = np.asarray(state.elkan.l)
+        meta = {
+            "engine": "local", "n_shards": 1, "n_points": self.n_points,
+            "has_mb": True, "has_elkan": state.elkan is not None,
+            "mb_pos": self._mb_pos,
+            "rng_state": self._rng.bit_generator.state,
+        }
+        return tree, meta
+
+    def restore(self, store, step, meta):
+        proto = {"stats": self.state.stats,
+                 "a": self.state.points.a, "d": self.state.points.d,
+                 "lb": self.state.points.lb, "round": self.state.round}
+        if meta.get("has_elkan"):
+            if self.state.elkan is None:
+                raise ValueError(
+                    "checkpoint carries elkan bounds but this config "
+                    "does not use bounds='elkan'")
+            proto["elkan_l"] = self.state.elkan.l
+        if meta.get("has_mb"):
+            proto["mb_perm"] = jnp.asarray(self._mb_perm)
+        got = store.restore(proto, step=step)
+        if meta.get("has_mb"):
+            self._mb_perm = np.asarray(got["mb_perm"])
+            self._mb_pos = int(meta["mb_pos"])
+        if meta.get("rng_state") is not None:
+            self._rng.bit_generator.state = meta["rng_state"]
+        points = PointState(a=got["a"], d=got["d"], lb=got["lb"])
+        elkan = (ElkanBounds(l=got["elkan_l"]) if meta.get("has_elkan")
+                 else None)
+        return KMeansState(stats=got["stats"], points=points,
+                           elkan=elkan, round=got["round"])
+
 
 class LocalEngine:
     """Single-process engine over the bucketed-jit round functions."""
@@ -354,14 +509,23 @@ class _MeshRun(EngineRun):
         self._config = config
         self._mesh = mesh
         self._make_round = make_sharded_round
-        n_local = N_real // n_shards    # padded tail rows stay inactive
         self.b = max(1, min(config.b0, N_real) // n_shards)
-        self.b_max = max(1, n_local)
+        # every shard's real rows are prefix-contiguous in its storage
+        # slice; shards whose last storage row is a structural pad cap
+        # their active prefix via the per-shard n_valid mask inside the
+        # round, so b_max covers EVERY real row — including the tail
+        # rows of the low shards when N_real % n_shards != 0.
+        self.b_max = max(1, N // n_shards)
         self.n_shards = n_shards
-        self.n_active_target = n_local * n_shards
+        self.n_active_target = N_real
+        self._N = N
+        # per-shard real-row cap is derived inside the sharded round
+        # from the shard's axis index; None disables masking entirely
+        self._n_real = N_real if N_real % n_shards else None
         # storage row shard*(N/s)+i holds shuffle position i*s+shard;
         # positions >= N_real are structural pads
         pos = np.arange(N).reshape(N // n_shards, n_shards).T.ravel()
+        self._pos = pos
         orig = perm[pos]
         self.orig_index = np.where(orig < N_real, orig, -1)
         self.n_points = N_real
@@ -370,13 +534,67 @@ class _MeshRun(EngineRun):
         round_fn = self._make_round(
             self._mesh, self._config.data_axes, b_local=b,
             rho=self._config.rho, bounds=self._config.bounds,
-            capacity=capacity, use_shalf=self._config.use_shalf)
+            capacity=capacity, use_shalf=self._config.use_shalf,
+            n_real=self._n_real)
         return round_fn(self._Xd, state)
 
     def eval_mse(self, state):
         if self._Xv is None:
             return None
         return float(full_mse(self._Xv, state.stats.C))
+
+    # -- checkpointing ------------------------------------------------------
+    # storage row shard*(N/s)+i holds shuffle position i*s+shard, so
+    # canonical order is storage gathered, permuted by _pos, pads cut.
+
+    def capture(self, state):
+        def canon(arr):
+            h = np.asarray(arr)
+            out = np.empty_like(h)
+            out[self._pos] = h
+            return out[:self.n_points]
+
+        tree = {
+            "stats": jax.tree.map(np.asarray, state.stats),
+            "a": canon(state.points.a),
+            "d": canon(state.points.d),
+            "lb": canon(state.points.lb),
+            "round": np.asarray(state.round),
+        }
+        meta = {"engine": "mesh", "n_shards": self.n_shards,
+                "n_points": self.n_points, "has_mb": False,
+                "has_elkan": False}
+        return tree, meta
+
+    def restore(self, store, step, meta):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(self._mesh, P())
+        row = NamedSharding(self._mesh, P(self._config.data_axes))
+
+        # replicated leaves go through the elastic re-shard machinery
+        small = {"stats": self.state.stats, "round": self.state.round}
+        small_sh = {"stats": jax.tree.map(lambda _: rep, self.state.stats),
+                    "round": rep}
+        got = store.restore(small, step=step, shardings=small_sh)
+
+        # per-point leaves come back canonical; re-pad + re-interleave
+        # for THIS mesh's shard count, then row-shard
+        pts = store.restore({"a": jnp.zeros((self.n_points,), jnp.int32),
+                             "d": jnp.zeros((self.n_points,), jnp.float32),
+                             "lb": jnp.zeros((self.n_points,),
+                                             jnp.float32)}, step=step)
+
+        def place(h, fill):
+            h = np.asarray(h)
+            full = np.full((self._N,), fill, h.dtype)
+            full[:self.n_points] = h
+            return jax.device_put(jnp.asarray(full[self._pos]), row)
+
+        points = PointState(a=place(pts["a"], -1),
+                            d=place(pts["d"], 0.0),
+                            lb=place(pts["lb"], 0.0))
+        return KMeansState(stats=got["stats"], points=points,
+                           elkan=None, round=got["round"])
 
 
 class MeshEngine:

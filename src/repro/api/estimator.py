@@ -26,8 +26,15 @@ from repro.api.config import FitConfig
 from repro.api.engine import (Engine, FitOutcome, make_engine, nested_jit,
                               run_loop)
 from repro.api.telemetry import RoundCallback, Telemetry
+from repro.checkpoint.store import CheckpointStore
 from repro.core.state import full_mse, init_state
 from repro.kernels import ops
+
+# config fields that must agree between a checkpoint manifest and the
+# resuming config for the restored state to be meaningful (max_rounds /
+# budgets / backend / shard layout may all change across a restart)
+_RESUME_KEYS = ("k", "algorithm", "rho", "b0", "bounds", "seed",
+                "use_shalf", "shuffle")
 
 
 class NotFittedError(RuntimeError):
@@ -54,17 +61,48 @@ class NestedKMeans:
         self.telemetry_: List[Telemetry] = []
         self._outcome: Optional[FitOutcome] = None
         self._stats = None          # streaming ClusterStats (partial_fit)
+        self._outcome_stale = False  # partial_fit moved the centroids
 
     # -- fitting ------------------------------------------------------------
 
     def fit(self, X, *, X_val=None,
-            init_C: Optional[np.ndarray] = None) -> "NestedKMeans":
-        """Run the configured algorithm to convergence / budget."""
+            init_C: Optional[np.ndarray] = None,
+            resume: bool = False) -> "NestedKMeans":
+        """Run the configured algorithm to convergence / budget.
+
+        ``resume=True`` (requires ``config.checkpoint``) restores the
+        latest in-loop checkpoint from ``checkpoint_dir`` and continues
+        the fit from there — bit-identically on the same engine, and
+        elastically across a shard-count (or local<->mesh) change. With
+        no checkpoint on disk yet the fit simply starts fresh.
+        """
         cfg = self.config.resolve(int(np.asarray(X).shape[0]))
+        resume_from = None
+        if resume:
+            if cfg.checkpoint is None:
+                raise ValueError(
+                    "fit(resume=True) requires config.checkpoint")
+            store = CheckpointStore(cfg.checkpoint.checkpoint_dir,
+                                    keep=cfg.checkpoint.keep)
+            if store.latest_step() is not None:
+                extra = store.read_extra()
+                saved = (extra or {}).get("config")
+                if saved:
+                    want = cfg.to_dict()
+                    bad = [k for k in _RESUME_KEYS
+                           if k in saved and saved[k] != want[k]]
+                    if bad:
+                        raise ValueError(
+                            f"checkpoint manifest disagrees with the "
+                            f"resuming config on {bad}; refusing to "
+                            f"restore a foreign fit")
+                resume_from = store
         run = self.engine.begin(X, cfg, X_val=X_val, init_C=init_C)
-        out = run_loop(run, cfg, on_round=self.on_round)
+        out = run_loop(run, cfg, on_round=self.on_round,
+                       resume_from=resume_from)
         self._outcome = out
         self._stats = out.state.stats
+        self._outcome_stale = False
         # copy: later partial_fit records must not mutate the outcome's
         # own telemetry history
         self.telemetry_ = list(out.telemetry)
@@ -103,6 +141,10 @@ class NestedKMeans:
             kernel_backend=cfg.kernel_backend)
         jax.block_until_ready(new_state.stats.C)
         self._stats = new_state.stats
+        if self._outcome is not None:
+            # the centroids have moved past the fit's outcome: its
+            # labels/state no longer describe this estimator
+            self._outcome_stale = True
         rec = Telemetry(
             round=len(self.telemetry_),
             t=t_prev + time.perf_counter() - t0, b=int(info.n_active),
@@ -132,13 +174,23 @@ class NestedKMeans:
         self._require_fitted()
         return np.asarray(self._stats.v)
 
+    def _require_fresh_outcome(self, what: str):
+        if self._outcome is None:
+            raise NotFittedError(f"{what} requires a full fit()")
+        if self._outcome_stale:
+            raise NotFittedError(
+                f"{what} is stale: partial_fit() has moved the centroids "
+                f"since fit(); use predict(X) for fresh assignments or "
+                f"refit")
+
     @property
     def labels_(self) -> np.ndarray:
         """Assignments of the fitted data, in the caller's row order
-        (-1 = row never entered the nested batch)."""
+        (-1 = row never entered the nested batch). Raises
+        `NotFittedError` once `partial_fit` has moved the centroids past
+        the fit that produced them."""
         self._require_fitted()
-        if self._outcome is None:
-            raise NotFittedError("labels_ requires a full fit()")
+        self._require_fresh_outcome("labels_")
         return self._outcome.labels
 
     @property
@@ -159,9 +211,10 @@ class NestedKMeans:
 
     @property
     def outcome_(self) -> FitOutcome:
+        """The `FitOutcome` of the last fit(). Raises `NotFittedError`
+        once `partial_fit` has moved the centroids past it."""
         self._require_fitted()
-        if self._outcome is None:
-            raise NotFittedError("outcome_ requires a full fit()")
+        self._require_fresh_outcome("outcome_")
         return self._outcome
 
     @property

@@ -1,15 +1,20 @@
 """Atomic, checksummed, keep-N checkpointing with elastic restore.
 
-Layout per step:
-    <dir>/step_000042/
+Layout per step (the version token makes same-step overwrites atomic):
+    <dir>/step_000000042.v<token>/
         manifest.json     {step, time, keys -> {file, shape, dtype, crc}}
+        extra.json        optional JSON sidecar (loop metadata/manifest)
         arr_000.npy ...   one file per pytree leaf
+    (unversioned ``step_000000042`` dirs from older writers stay
+    readable; a versioned dir for the same step supersedes them.)
 
 Properties needed at 1000-node scale:
-  * atomic: written to ``step_X.tmp-<pid>`` then os.rename'd — a crashed
-    writer never corrupts the latest checkpoint;
+  * atomic: written to a ``.tmp-<pid>`` dir then os.rename'd to a FRESH
+    versioned final name — the previous checkpoint for the same step is
+    only garbage-collected after the new one is fully on disk, so a
+    crashed writer never corrupts OR loses the latest checkpoint;
   * checksummed: crc32 per leaf, verified on restore;
-  * keep-N garbage collection;
+  * keep-N garbage collection (plus superseded same-step versions);
   * elastic: leaves are stored UNSHARDED (gathered); restore re-shards
     onto whatever mesh/sharding tree the caller passes — pod counts can
     change between runs;
@@ -26,7 +31,7 @@ import threading
 import time
 import zlib
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import ml_dtypes
@@ -51,6 +56,25 @@ def _key_strs(tree: Any):
     return out
 
 
+def _parse_step_dir(name: str) -> Optional[Tuple[int, int]]:
+    """step_000000042[.v<token>] -> (step, version); None if not a
+    (complete) checkpoint dir name. Unversioned legacy dirs sort as
+    version -1 so any versioned rewrite supersedes them."""
+    if ".tmp-" in name or not name.startswith("step_"):
+        return None
+    stem = name[len("step_"):]
+    stem, _, ver = stem.partition(".v")
+    try:
+        return int(stem), (int(ver) if ver else -1)
+    except ValueError:
+        return None
+
+
+# crashed-writer .tmp- dirs older than this are garbage-collected (a
+# healthy writer renames its tmp away within one save)
+_TMP_TTL_S = 300.0
+
+
 class CheckpointStore:
     def __init__(self, directory: str | Path, *, keep: int = 3):
         self.dir = Path(directory)
@@ -59,28 +83,37 @@ class CheckpointStore:
         self._thread: Optional[threading.Thread] = None
 
     # -- save ------------------------------------------------------------
-    def save(self, step: int, tree: Any, *, background: bool = False):
+    def save(self, step: int, tree: Any, *, background: bool = False,
+             extra: Optional[Dict[str, Any]] = None):
         """Snapshot to host then write. Returns after snapshot if
-        background=True (the disk write continues on a thread)."""
+        background=True (the disk write continues on a thread).
+
+        ``extra``: optional JSON-safe dict written as ``extra.json``
+        inside the step dir (read back with `read_extra`)."""
         host = jax.tree.map(lambda x: np.asarray(x), tree)
         if background:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True)
+                target=self._write, args=(step, host, extra), daemon=True)
             self._thread.start()
         else:
-            self._write(step, host)
+            self._write(step, host, extra)
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host_tree: Any):
+    def _write(self, step: int, host_tree: Any,
+               extra: Optional[Dict[str, Any]] = None):
         leaves, _ = _flatten(host_tree)
         keys = _key_strs(host_tree)
-        final = self.dir / f"step_{step:09d}"
-        tmp = self.dir / f"step_{step:09d}.tmp-{os.getpid()}"
+        # fresh versioned final name: the atomic rename lands NEXT TO any
+        # previous version of this step instead of over it, so a crash at
+        # any point leaves the previous checkpoint intact
+        token = time.time_ns()
+        final = self.dir / f"step_{step:09d}.v{token}"
+        tmp = self.dir / f"{final.name}.tmp-{os.getpid()}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
@@ -97,30 +130,79 @@ class CheckpointStore:
                 "dtype": str(arr.dtype), "logical_dtype": logical,
                 "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
             }
+        if extra is not None:
+            (tmp / "extra.json").write_text(json.dumps(extra, indent=1))
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-        if final.exists():
-            shutil.rmtree(final)
         os.rename(tmp, final)
         self._gc()
 
+    def _step_dirs(self) -> Dict[int, Path]:
+        """Newest complete dir per step (versioned beats legacy)."""
+        best: Dict[int, Tuple[int, Path]] = {}
+        for p in self.dir.glob("step_*"):
+            parsed = _parse_step_dir(p.name)
+            if parsed is None or not (p / "manifest.json").exists():
+                continue
+            step, ver = parsed
+            if step not in best or ver > best[step][0]:
+                best[step] = (ver, p)
+        return {s: p for s, (v, p) in best.items()}
+
     def _gc(self):
-        steps = sorted(self.steps())
+        dirs = self._step_dirs()
+        # superseded versions of surviving steps
+        for p in self.dir.glob("step_*"):
+            parsed = _parse_step_dir(p.name)
+            if parsed is None:
+                continue
+            step, _ = parsed
+            if dirs.get(step) is not None and p != dirs[step]:
+                shutil.rmtree(p, ignore_errors=True)
+        # keep-N on steps
+        steps = sorted(dirs)
         for s in steps[: max(0, len(steps) - self.keep)]:
-            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+            shutil.rmtree(dirs[s], ignore_errors=True)
+        # crashed-writer tmp dirs: a failed rename leaves a fresh-named
+        # .tmp- dir no later save will ever match — reap old ones here
+        now = time.time()
+        for p in self.dir.glob("*.tmp-*"):
+            try:
+                if now - p.stat().st_mtime > _TMP_TTL_S:
+                    shutil.rmtree(p, ignore_errors=True)
+            except OSError:
+                pass
+
+    def clear(self):
+        """Remove every checkpoint (and tmp debris) in the directory."""
+        self.wait()
+        for p in self.dir.glob("step_*"):
+            if _parse_step_dir(p.name) is not None or ".tmp-" in p.name:
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- restore ----------------------------------------------------------
     def steps(self):
-        out = []
-        for p in self.dir.glob("step_*"):
-            if p.name.endswith(".tmp") or ".tmp-" in p.name:
-                continue
-            if (p / "manifest.json").exists():
-                out.append(int(p.name.split("_")[1]))
-        return sorted(out)
+        return sorted(self._step_dirs())
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def _dir_for(self, step: Optional[int]) -> Tuple[int, Path]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dirs().get(step)
+        if d is None:
+            raise FileNotFoundError(f"no checkpoint for step {step} in "
+                                    f"{self.dir}")
+        return step, d
+
+    def read_extra(self, step: Optional[int] = None
+                   ) -> Optional[Dict[str, Any]]:
+        """The ``extra`` dict saved with the step (None if absent)."""
+        _, d = self._dir_for(step)
+        p = d / "extra.json"
+        return json.loads(p.read_text()) if p.exists() else None
 
     def restore(self, tree_like: Any, *, step: Optional[int] = None,
                 shardings: Any = None, verify: bool = True) -> Any:
@@ -129,10 +211,7 @@ class CheckpointStore:
         ``shardings``: optional matching pytree of NamedSharding — leaves
         are device_put with them (elastic re-shard onto any mesh).
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = self.dir / f"step_{step:09d}"
+        step, d = self._dir_for(step)
         manifest = json.loads((d / "manifest.json").read_text())
         keys = _key_strs(tree_like)
         leaves, treedef = _flatten(tree_like)

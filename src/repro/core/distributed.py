@@ -58,8 +58,19 @@ def shard_map_compat(fn, *, mesh, in_specs, out_specs):
 def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
                        b_local: int, rho: float, bounds: str = "hamerly2",
                        capacity: Optional[int] = None,
-                       use_shalf: bool = True):
-    """jit(shard_map(nested_round)) for one (b_local, capacity) bucket."""
+                       use_shalf: bool = True,
+                       n_real: Optional[int] = None):
+    """jit(shard_map(nested_round)) for one (b_local, capacity) bucket.
+
+    ``n_real``: global count of real (non-pad) rows. When it is not a
+    multiple of the shard count, the interleaved placement leaves the
+    low shards holding one real row in their last storage slot and the
+    high shards holding a structural pad there. Each shard derives its
+    own real-row count from its linear index over ``data_axes`` and caps
+    the active prefix against it (nested_round's ``n_valid``), so every
+    real row — and no pad — enters the final full batch. ``None`` keeps
+    the unmasked round (divisible N, and the dry-run cost model).
+    """
     row = P(data_axes)
     pt_specs = PointState(a=row, d=row, lb=row)
     st_specs = ClusterStats(C=P(), S=P(), v=P(), sse=P(), p=P())
@@ -68,9 +79,25 @@ def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
     info_specs = RoundInfo(**{f.name: P() for f in
                               dataclasses.fields(RoundInfo)})
 
-    fn = functools.partial(
-        rounds.nested_round, b=b_local, rho=rho, bounds=bounds,
-        capacity=capacity, use_shalf=use_shalf, data_axes=data_axes)
+    sizes = tuple(int(mesh.shape[a]) for a in data_axes)
+    n_shards = 1
+    for s in sizes:
+        n_shards *= s
+
+    def fn(Xs, st):
+        n_valid = None
+        if n_real is not None:
+            # linear shard index, row-major over data_axes — matches the
+            # slice order of NamedSharding(mesh, P(data_axes, None))
+            idx = jnp.zeros((), jnp.int32)
+            for ax, sz in zip(data_axes, sizes):
+                idx = idx * sz + jax.lax.axis_index(ax)
+            base, rem = divmod(n_real, n_shards)
+            n_valid = base + (idx < rem).astype(jnp.int32)
+        return rounds.nested_round(
+            Xs, st, b=b_local, rho=rho, bounds=bounds, capacity=capacity,
+            use_shalf=use_shalf, data_axes=data_axes, n_valid=n_valid)
+
     shardmapped = shard_map_compat(
         fn, mesh=mesh, in_specs=(P(data_axes, None), state_specs),
         out_specs=(state_specs, info_specs))

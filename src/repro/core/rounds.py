@@ -62,11 +62,15 @@ def _delta_sv(x: jax.Array, a_prev: jax.Array, a_new: jax.Array, k: int,
               kernel_backend: Optional[str]):
     """The mb-f / nested S,v delta: remove expired, add current. Returns
     (dS, dv) so callers can psum the delta across data shards before
-    applying it to the replicated stats."""
+    applying it to the replicated stats. Rows with ``a_new == -1``
+    (structural pads masked out of the active prefix) contribute
+    nothing."""
     seen = a_prev >= 0
     changed = seen & (a_new != a_prev)
     w_rm = jnp.where(changed, 1.0, 0.0).astype(jnp.float32)
-    w_add = jnp.where(changed | ~seen, 1.0, 0.0).astype(jnp.float32)
+    w_add = jnp.where((changed | ~seen) & (a_new >= 0), 1.0, 0.0) \
+        .astype(jnp.float32)
+    a_new = jnp.clip(a_new, 0, k - 1)
     S_rm, v_rm = ops.cluster_sum(x, jnp.clip(a_prev, 0, k - 1), k,
                                  weights=w_rm, backend=kernel_backend)
     S_add, v_add = ops.cluster_sum(x, a_new, k, weights=w_add,
@@ -103,7 +107,8 @@ def lloyd_round(X: jax.Array, state: KMeansState, *,
         n_recomputed=jnp.asarray(n, jnp.int32),
         n_active=jnp.asarray(n, jnp.int32),
         overflow=jnp.asarray(False), grow=jnp.asarray(False),
-        r_median=jnp.asarray(jnp.inf, jnp.float32))
+        r_median=jnp.asarray(jnp.inf, jnp.float32),
+        p_max=jnp.max(stats.p))
     new_state = dataclasses.replace(state, stats=stats, points=points,
                                     round=state.round + 1)
     return new_state, info
@@ -153,7 +158,8 @@ def mb_round(X: jax.Array, idx: jax.Array, state: KMeansState, *,
         n_recomputed=jnp.asarray(b, jnp.int32),
         n_active=jnp.asarray(b, jnp.int32),
         overflow=jnp.asarray(False), grow=jnp.asarray(False),
-        r_median=jnp.asarray(jnp.inf, jnp.float32))
+        r_median=jnp.asarray(jnp.inf, jnp.float32),
+        p_max=jnp.max(stats.p))
     new_state = dataclasses.replace(state, stats=stats, points=points,
                                     round=state.round + 1)
     return new_state, info
@@ -167,15 +173,16 @@ def mbf_round(X, idx, state, *, kernel_backend=None):
 # Nested (grow-batch) rounds: gb-rho / tb-rho
 # --------------------------------------------------------------------------
 
-def _assign_exhaustive(x, state, a_prev):
+def _assign_exhaustive(x, state, a_prev, valid):
     """bounds='none': full top-2 for every active point."""
     a_new, d1sq, d2sq = ops.assign_top2(x, state.stats.C)
-    return (a_new, _euclid(d1sq), _euclid(d2sq),
-            jnp.asarray(x.shape[0], jnp.int32), jnp.asarray(False),
-            None)
+    n_rec = (jnp.asarray(x.shape[0], jnp.int32) if valid is None
+             else jnp.sum(valid.astype(jnp.int32)))
+    return (a_new, _euclid(d1sq), _euclid(d2sq), n_rec,
+            jnp.asarray(False), None)
 
 
-def _assign_hamerly2(x, state, a_prev, *, capacity: Optional[int],
+def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
                      use_shalf: bool, kernel_backend):
     """TPU-native bounding: exact-refresh upper + decayed 2nd-nearest lower.
 
@@ -203,6 +210,10 @@ def _assign_hamerly2(x, state, a_prev, *, capacity: Optional[int],
         s_half = _half_intercentroid(C)
         thresh = jnp.maximum(lb_dec, s_half[jnp.clip(a_prev, 0, None)])
     settled = seen & (d_a <= thresh)
+    if valid is not None:
+        # masked structural pads never need recompute; their outputs are
+        # forced back to the never-assigned sentinel by the caller
+        settled = settled | ~valid
     needs = ~settled
     n_need = jnp.sum(needs.astype(jnp.int32))
 
@@ -268,7 +279,8 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
                  rho: float, bounds: str = "hamerly2",
                  capacity: Optional[int] = None, use_shalf: bool = True,
                  kernel_backend: Optional[str] = None,
-                 data_axes: Tuple[str, ...] = ()
+                 data_axes: Tuple[str, ...] = (),
+                 n_valid: Optional[jax.Array] = None
                  ) -> Tuple[KMeansState, RoundInfo]:
     """One gb/tb round over the nested prefix ``X[:b]`` (b STATIC).
 
@@ -282,31 +294,51 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
     prefix; the global batch is the union of shard prefixes), the S/v/sse
     deltas are psum-reduced so the replicated stats — and therefore the
     growth decision — stay bit-identical on every shard.
+
+    ``n_valid``: optional per-call scalar capping the REAL rows of this
+    slice. Rows at positions >= n_valid are structural pads: they are
+    held out of the assignment (``a == -1``), contribute nothing to
+    S/v/sse/mse, and are excluded from n_active/n_changed. This is how a
+    shard whose real-row count is not a multiple of the shard count caps
+    ``b`` against its own real rows while b stays a shared static.
     """
     k = state.stats.C.shape[0]
     x = X[:b]
     a_prev = state.points.a[:b]
+    valid = None if n_valid is None else jnp.arange(b) < n_valid
 
     if bounds == "none":
         a_new, d_new, lb2, n_rec, overflow, l_new = \
-            _assign_exhaustive(x, state, a_prev)
+            _assign_exhaustive(x, state, a_prev, valid)
     elif bounds == "hamerly2":
         a_new, d_new, lb2, n_rec, overflow, l_new = _assign_hamerly2(
-            x, state, a_prev, capacity=capacity, use_shalf=use_shalf,
-            kernel_backend=kernel_backend)
+            x, state, a_prev, valid, capacity=capacity,
+            use_shalf=use_shalf, kernel_backend=kernel_backend)
     elif bounds == "elkan":
+        if valid is not None:
+            raise NotImplementedError(
+                "n_valid masking is not plumbed through the elkan "
+                "bounds (the mesh engine never runs them)")
         a_new, d_new, lb2, n_rec, overflow, l_new = \
             _assign_elkan(x, state, a_prev, b=b)
     else:
         raise ValueError(f"unknown bounds {bounds!r}")
 
+    if valid is not None:
+        a_new = jnp.where(valid, a_new, jnp.int32(-1))
+        d_new = jnp.where(valid, d_new, 0.0)
+        if lb2 is not None:
+            lb2 = jnp.where(valid, lb2, 0.0)
+
     dS, dv = _delta_sv(x, a_prev, a_new, k, kernel_backend)
     sse = _refresh_sse(d_new, a_new, k)
     mse_num = jnp.sum(d_new * d_new)
-    mse_den = jnp.asarray(b, jnp.float32)
+    mse_den = (jnp.asarray(b, jnp.float32) if valid is None
+               else jnp.sum(valid.astype(jnp.float32)))
     n_changed = jnp.sum(((a_prev >= 0) & (a_new != a_prev))
                         .astype(jnp.int32))
-    n_active = jnp.asarray(b, jnp.int32)
+    n_active = (jnp.asarray(b, jnp.int32) if valid is None
+                else jnp.sum(valid.astype(jnp.int32)))
     n_rec = n_rec.astype(jnp.int32)
     overflow = overflow.astype(jnp.int32)
     if data_axes:
@@ -335,7 +367,8 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
     info = RoundInfo(
         batch_mse=mse_num / jnp.maximum(mse_den, 1.0), n_changed=n_changed,
         n_recomputed=n_rec, n_active=n_active,
-        overflow=overflow.astype(jnp.bool_), grow=grow, r_median=r_med)
+        overflow=overflow.astype(jnp.bool_), grow=grow, r_median=r_med,
+        p_max=jnp.max(stats.p))
     new_state = dataclasses.replace(state, stats=stats, points=points,
                                     elkan=elkan, round=state.round + 1)
     return new_state, info

@@ -98,10 +98,14 @@ class RoundInfo:
     batch_mse: jax.Array        # mean d^2 over the active batch
     n_changed: jax.Array        # assignments that changed this round
     n_recomputed: jax.Array     # points whose distances were recomputed
-    n_active: jax.Array         # active batch size (== b)
+    n_active: jax.Array         # active batch size (real rows only)
     overflow: jax.Array         # bool: capacity < points needing recompute
     grow: jax.Array             # bool: controller voted to double b
     r_median: jax.Array         # median sigma_C/p ratio (controller stat)
+    p_max: jax.Array            # max centroid movement after the update
+                                # (psum-consistent; the host convergence
+                                # check reads this instead of re-syncing
+                                # state.stats.p every round)
 
 
 def centroid_update(stats: ClusterStats) -> ClusterStats:

@@ -20,18 +20,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.api import FitConfig, NestedKMeans
+from repro.api import CheckpointConfig, FitConfig, NestedKMeans
 from repro.models import model as M
 from repro.train import step as tstep
 
 
-def build_codebook(E: np.ndarray, k: int, seed: int) -> NestedKMeans:
-    """Fit the embedding-table codebook through the unified api."""
+def build_codebook(E: np.ndarray, k: int, seed: int, *,
+                   checkpoint_dir: str | None = None,
+                   resume: bool = False) -> NestedKMeans:
+    """Fit the embedding-table codebook through the unified api.
+
+    With ``checkpoint_dir`` the fit checkpoints its full loop state
+    in-loop and (``resume=True``) continues a killed fit bit-identically
+    instead of restarting.
+    """
+    ck = (CheckpointConfig(checkpoint_dir=checkpoint_dir, save_every=20)
+          if checkpoint_dir else None)
     km = NestedKMeans(FitConfig(k=k, algorithm="tb", rho=float("inf"),
                                 b0=min(2 * k, E.shape[0]),
                                 bounds="hamerly2", max_rounds=200,
-                                seed=seed))
-    km.fit(E)
+                                seed=seed, checkpoint=ck))
+    km.fit(E, resume=resume and ck is not None)
     return km
 
 

@@ -39,8 +39,17 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--n-micro", type=int, default=2)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", "--checkpoint-dir", dest="ckpt_dir",
+                    default=None,
+                    help="checkpoint directory (LM training state; the "
+                         "--codebook fit checkpoints in-loop under "
+                         "<dir>/codebook)")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="restore the latest checkpoint in --ckpt-dir "
+                         "before training / the codebook fit "
+                         "(--no-resume starts fresh)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--codebook", type=int, default=0, metavar="K",
                     help="cluster the trained embedding table into K "
@@ -68,7 +77,7 @@ def main():
                      seed=args.seed)
     store = CheckpointStore(args.ckpt_dir) if args.ckpt_dir else None
     start = 0
-    if store and store.latest_step() is not None:
+    if store and args.resume and store.latest_step() is not None:
         start = store.latest_step()
         restored = store.restore({"params": params, "opt": opt})
         params, opt = restored["params"], restored["opt"]
@@ -109,7 +118,12 @@ def main():
     if args.codebook:
         from repro.launch.serve import build_codebook
         E = np.asarray(params["embed"], np.float32)
-        km = build_codebook(E, args.codebook, args.seed)
+        # the k-means fit checkpoints in-loop (run_loop saves the full
+        # growth-schedule state) and resumes if a prior run was killed
+        ckpt_dir = (f"{args.ckpt_dir}/codebook" if args.ckpt_dir
+                    else None)
+        km = build_codebook(E, args.codebook, args.seed,
+                            checkpoint_dir=ckpt_dir, resume=args.resume)
         sizes = np.bincount(km.predict(E), minlength=args.codebook)
         print(f"embedding codebook (k={args.codebook}): "
               f"VQ-MSE {-km.score(E) / E.shape[0]:.6f} "

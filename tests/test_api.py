@@ -221,6 +221,29 @@ def test_partial_fit_first_batch_must_cover_k():
             np.zeros((8, 4), np.float32))
 
 
+def test_partial_fit_after_fit_staleness_contract(blobs):
+    """partial_fit moves the centroids past the fit's outcome, so the
+    fit-scoped attributes (labels_/outcome_) raise NotFittedError
+    instead of silently serving stale assignments; the live surface
+    (centers, predict, telemetry) keeps working."""
+    X, _ = blobs
+    km = api.NestedKMeans(api.FitConfig(k=8, b0=512, max_rounds=30,
+                                        seed=0)).fit(X[:2048])
+    _ = km.labels_            # fresh after fit
+    _ = km.outcome_
+    km.partial_fit(X[2048:2048 + 256])
+    with pytest.raises(api.NotFittedError, match="stale"):
+        _ = km.labels_
+    with pytest.raises(api.NotFittedError, match="stale"):
+        _ = km.outcome_
+    # the streaming surface stays live
+    assert km.cluster_centers_.shape == (8, X.shape[1])
+    assert km.predict(X[:64]).shape == (64,)
+    # a fresh fit() clears the staleness
+    km.fit(X[:2048])
+    assert km.labels_.shape == (2048,)
+
+
 # ---------------------------------------------------------------------------
 # engines
 # ---------------------------------------------------------------------------

@@ -51,7 +51,7 @@ def test_checksum_detects_corruption(tmp_path):
     store = CheckpointStore(tmp_path)
     t = tree()
     store.save(1, t)
-    d = tmp_path / "step_000000001"
+    d = store._step_dirs()[1]
     # corrupt one leaf
     target = next(d.glob("arr_*.npy"))
     arr = np.load(target)
@@ -80,6 +80,108 @@ def test_missing_leaf_raises(tmp_path):
     store.save(1, {"a": jnp.zeros((2,))})
     with pytest.raises(KeyError):
         store.restore({"a": jnp.zeros((2,)), "b": jnp.zeros((3,))})
+
+
+def test_crash_during_overwrite_keeps_previous(tmp_path, monkeypatch):
+    """Re-saving a step is atomic: a writer that crashes at ANY point
+    before its rename lands must leave the previous checkpoint intact.
+    (The old implementation did rmtree(final) THEN rename — a crash
+    between the two lost the only copy.)"""
+    store = CheckpointStore(tmp_path)
+    t1 = tree(1)
+    store.save(5, t1)
+
+    calls = {"n": 0}
+    real_rename = os.rename
+
+    def crashing_rename(src, dst):
+        calls["n"] += 1
+        raise OSError("simulated crash before the atomic rename")
+
+    monkeypatch.setattr(os, "rename", crashing_rename)
+    with pytest.raises(OSError):
+        store.save(5, tree(2))
+    monkeypatch.setattr(os, "rename", real_rename)
+    assert calls["n"] == 1
+
+    # previous checkpoint is fully readable
+    assert store.latest_step() == 5
+    got = store.restore(jax.tree.map(jnp.zeros_like, t1))
+    np.testing.assert_array_equal(np.asarray(t1["w"]),
+                                  np.asarray(got["w"]))
+
+
+def test_overwrite_same_step_newest_wins(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(3, tree(1))
+    t2 = tree(2)
+    store.save(3, t2)
+    assert store.steps() == [3]
+    got = store.restore(jax.tree.map(jnp.zeros_like, t2))
+    np.testing.assert_array_equal(np.asarray(t2["w"]),
+                                  np.asarray(got["w"]))
+    # the superseded version was garbage-collected
+    assert len([p for p in (tmp_path).glob("step_*")
+                if ".tmp-" not in p.name]) == 1
+
+
+def test_legacy_unversioned_dir_still_restorable(tmp_path):
+    """Checkpoints written by the pre-versioning layout (plain
+    ``step_X`` dirs) stay readable, and a versioned rewrite of the same
+    step supersedes them."""
+    store = CheckpointStore(tmp_path)
+    t1 = tree(1)
+    store.save(2, t1)
+    d = store._step_dirs()[2]
+    legacy = tmp_path / "step_000000002"
+    os.rename(d, legacy)                  # devolve to the legacy layout
+    assert store.steps() == [2]
+    got = store.restore(jax.tree.map(jnp.zeros_like, t1))
+    np.testing.assert_array_equal(np.asarray(t1["w"]),
+                                  np.asarray(got["w"]))
+    t2 = tree(9)
+    store.save(2, t2)                     # versioned rewrite wins
+    got = store.restore(jax.tree.map(jnp.zeros_like, t2))
+    np.testing.assert_array_equal(np.asarray(t2["w"]),
+                                  np.asarray(got["w"]))
+    assert not legacy.exists()            # superseded + gc'd
+
+
+def test_gc_reaps_stale_tmp_dirs(tmp_path):
+    """A crashed writer's fresh-named .tmp- dir can never match a later
+    write's cleanup check; _gc reaps it once it is old enough."""
+    import time as _time
+    store = CheckpointStore(tmp_path)
+    stale = tmp_path / "step_000000007.v123.tmp-4242"
+    stale.mkdir()
+    old = _time.time() - 3600
+    os.utime(stale, (old, old))
+    fresh = tmp_path / "step_000000008.v456.tmp-4242"
+    fresh.mkdir()                         # a live writer's tmp survives
+    store.save(9, tree())
+    assert not stale.exists()
+    assert fresh.exists()
+    assert store.steps() == [9]
+
+
+def test_clear_removes_all_checkpoints(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(1, tree(1))
+    store.save(2, tree(2))
+    store.clear()
+    assert store.steps() == []
+    assert store.latest_step() is None
+
+
+def test_extra_json_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path)
+    extra = {"loop": {"b_global": 512, "t_work": 1.5},
+             "config": {"k": 8}}
+    store.save(4, tree(), extra=extra)
+    assert store.read_extra() == extra
+    assert store.read_extra(4) == extra
+    store.save(5, tree())
+    assert store.read_extra(5) is None    # extra is optional per step
 
 
 def test_kmeans_growth_state_roundtrip(tmp_path):

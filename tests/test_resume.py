@@ -1,0 +1,228 @@
+"""In-loop checkpoint / kill-and-resume through `run_loop`.
+
+The contract: a fit checkpointed at round R and resumed produces
+BIT-IDENTICAL centroids and telemetry (minus wall-clock ``t``) to an
+uninterrupted run — the checkpoint captures the full host-schedule
+state (KMeansState, b, capacity, patience, work clock, telemetry and
+the mb resampling stream), not just centroids. The mesh/elastic side
+(2-shard subprocess, shard-count change across restore) lives in
+scripts/smoke_resume_mesh.py, driven here by a slow marker.
+"""
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import rounds
+from repro.core.state import init_state
+
+
+def _telemetry_equal_minus_t(a, b):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        da, db = ra.to_dict(), rb.to_dict()
+        da.pop("t"), db.pop("t")
+        assert da == db, (da, db)
+
+
+# ---------------------------------------------------------------------------
+# LocalEngine kill-and-resume
+# ---------------------------------------------------------------------------
+
+def test_local_kill_and_resume_bit_identical(tmp_path, blobs, blobs_val):
+    """tb fit interrupted at round 7, resumed: centroids + telemetry
+    bit-identical to the uninterrupted run."""
+    X, _ = blobs
+    cfg = api.FitConfig(k=8, b0=512, max_rounds=40, eval_every=5, seed=0)
+    out_a = api.fit(X, cfg, X_val=blobs_val)
+    assert out_a.converged
+
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=3)
+    api.fit(X, dataclasses.replace(cfg, max_rounds=7, checkpoint=ck),
+            X_val=blobs_val)
+    km = api.NestedKMeans(dataclasses.replace(cfg, checkpoint=ck))
+    km.fit(X, X_val=blobs_val, resume=True)
+
+    np.testing.assert_array_equal(out_a.C, km.cluster_centers_)
+    _telemetry_equal_minus_t(out_a.telemetry, km.telemetry_)
+    assert km.converged_
+
+
+def test_local_resume_restores_mb_stream(tmp_path, blobs):
+    """mbf resumes bit-identically: the resampling permutation, stream
+    position and host RNG state all ride in the checkpoint."""
+    X, _ = blobs
+    cfg = api.FitConfig(k=8, algorithm="mbf", b0=700, max_rounds=14,
+                        seed=2)
+    out_a = api.fit(X, cfg)
+
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=2)
+    api.fit(X, dataclasses.replace(cfg, max_rounds=5, checkpoint=ck))
+    km = api.NestedKMeans(dataclasses.replace(cfg, checkpoint=ck))
+    km.fit(X, resume=True)
+    np.testing.assert_array_equal(out_a.C, km.cluster_centers_)
+    _telemetry_equal_minus_t(out_a.telemetry, km.telemetry_)
+
+
+def test_resume_of_finished_fit_is_noop(tmp_path, blobs):
+    X, _ = blobs
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=5)
+    cfg = api.FitConfig(k=8, b0=512, max_rounds=60, seed=0, checkpoint=ck)
+    out_a = api.fit(X, cfg)
+    assert out_a.converged
+    km = api.NestedKMeans(cfg).fit(X, resume=True)
+    assert km.converged_
+    np.testing.assert_array_equal(out_a.C, km.cluster_centers_)
+    _telemetry_equal_minus_t(out_a.telemetry, km.telemetry_)
+
+
+def test_resume_without_checkpoint_config_raises(blobs):
+    X, _ = blobs
+    with pytest.raises(ValueError, match="checkpoint"):
+        api.NestedKMeans(api.FitConfig(k=8)).fit(X, resume=True)
+
+
+def test_resume_with_empty_dir_starts_fresh(tmp_path, blobs):
+    X, _ = blobs
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=50)
+    km = api.NestedKMeans(api.FitConfig(k=8, b0=512, max_rounds=10,
+                                        checkpoint=ck))
+    km.fit(X, resume=True)        # nothing on disk yet: cold start
+    assert km.n_rounds_ == 10
+
+
+def test_fresh_fit_supersedes_stale_checkpoints(tmp_path, blobs):
+    """A NON-resume checkpointed fit into a directory holding an older
+    run clears it: otherwise the old higher-numbered steps would GC the
+    new run's early saves on arrival, and a later resume would silently
+    restore the stale fit."""
+    from repro.checkpoint.store import CheckpointStore
+    X, _ = blobs
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=2)
+    cfg = api.FitConfig(k=8, b0=512, max_rounds=60, seed=0, checkpoint=ck)
+    api.fit(X, cfg)                       # long run, high step numbers
+    store = CheckpointStore(tmp_path)
+    old_latest = store.latest_step()
+    out = api.fit(X, dataclasses.replace(cfg, max_rounds=4))  # fresh fit
+    assert store.latest_step() == 4       # old steps gone, new run kept
+    assert store.latest_step() != old_latest
+    km = api.NestedKMeans(dataclasses.replace(cfg, max_rounds=4))
+    km.fit(X, resume=True)                # resumes the NEW run, not the
+    np.testing.assert_array_equal(out.C, km.cluster_centers_)  # stale one
+
+
+def test_resume_rejects_foreign_manifest(tmp_path, blobs):
+    X, _ = blobs
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=2)
+    api.fit(X, api.FitConfig(k=8, b0=512, max_rounds=4, seed=0,
+                             checkpoint=ck))
+    km = api.NestedKMeans(api.FitConfig(k=8, b0=512, max_rounds=10,
+                                        seed=1, checkpoint=ck))
+    with pytest.raises(ValueError, match="seed"):
+        km.fit(X, resume=True)
+
+
+def test_checkpoint_manifest_carries_fitconfig(tmp_path, blobs):
+    """Every step dir carries the exact resolved FitConfig dict."""
+    from repro.checkpoint.store import CheckpointStore
+    X, _ = blobs
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=2)
+    cfg = api.FitConfig(k=8, algorithm="gb", b0=512, max_rounds=6,
+                        checkpoint=ck)
+    api.fit(X, cfg)
+    store = CheckpointStore(tmp_path)
+    extra = store.read_extra()
+    got = api.FitConfig.from_dict(extra["config"])
+    assert got == cfg.resolve(len(X))    # manifest holds the RESOLVED cfg
+    assert extra["loop"]["rounds_done"] == store.latest_step()
+
+
+# ---------------------------------------------------------------------------
+# the final-eval double-count fix
+# ---------------------------------------------------------------------------
+
+def test_no_duplicate_final_val_record(blobs, blobs_val):
+    """With eval_every=1 the last in-loop round already evaluated
+    validation; run_loop must not append a second eval at the same t."""
+    X, _ = blobs
+    out = api.fit(X, api.FitConfig(k=8, b0=512, max_rounds=30,
+                                   eval_every=1, seed=0),
+                  X_val=blobs_val)
+    assert all(r.batch_mse is not None for r in out.telemetry)
+    assert out.telemetry[-1].val_mse is not None
+    # sparse cadence still gets the final eval record
+    out2 = api.fit(X, api.FitConfig(k=8, b0=512, max_rounds=30,
+                                    eval_every=1000, seed=0),
+                   X_val=blobs_val)
+    assert out2.telemetry[-1].batch_mse is None
+    assert out2.telemetry[-1].val_mse is not None
+
+
+# ---------------------------------------------------------------------------
+# n_valid masking (the unit-level face of the mesh tail-row fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bounds", ["none", "hamerly2"])
+def test_nested_round_n_valid_masks_tail(bounds):
+    """nested_round(n_valid=m) == nested_round over X[:m]: masked tail
+    rows stay unassigned and contribute nothing to the statistics."""
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    k, b, m = 4, 32, 27
+
+    full = init_state(X, k, bounds=bounds)
+    masked, info_m = rounds.nested_round(
+        X, full, b=b, rho=math.inf, bounds=bounds, capacity=None,
+        n_valid=jnp.asarray(m))
+    ref, info_r = rounds.nested_round(
+        X[:m], init_state(X, k, bounds=bounds), b=m, rho=math.inf,
+        bounds=bounds, capacity=None)
+
+    np.testing.assert_array_equal(np.asarray(masked.stats.C),
+                                  np.asarray(ref.stats.C))
+    np.testing.assert_array_equal(np.asarray(masked.stats.v),
+                                  np.asarray(ref.stats.v))
+    np.testing.assert_array_equal(np.asarray(masked.stats.sse),
+                                  np.asarray(ref.stats.sse))
+    a = np.asarray(masked.points.a)
+    assert (a[m:b] == -1).all()          # masked rows never assigned
+    assert (a[:m] >= 0).all()
+    assert int(info_m.n_active) == m
+    assert float(info_m.batch_mse) == pytest.approx(
+        float(info_r.batch_mse))
+
+
+def test_round_info_carries_p_max(blobs):
+    """The convergence check reads p_max from RoundInfo (no per-round
+    host sync of state.stats.p); it must equal max(p) of the new state."""
+    X, _ = blobs
+    state = init_state(jnp.asarray(X), 8, bounds="hamerly2")
+    new, info = rounds.nested_round(jnp.asarray(X), state, b=512,
+                                    rho=math.inf, bounds="hamerly2",
+                                    capacity=None)
+    assert float(info.p_max) == pytest.approx(
+        float(jnp.max(new.stats.p)))
+
+
+# ---------------------------------------------------------------------------
+# mesh: subprocess (2 data shards, non-divisible N, elastic restore)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mesh_resume_subprocess():
+    """Kill-and-resume on the MeshEngine: bit-identical same-shard
+    resume, tail-row labeling with N % n_shards != 0, and elastic
+    restore onto 4 shards and onto the LocalEngine."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "scripts/smoke_resume_mesh.py"],
+                       env=env, capture_output=True, text=True,
+                       timeout=600, cwd=os.path.dirname(
+                           os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
