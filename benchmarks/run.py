@@ -1,7 +1,8 @@
 """Benchmark entry point: ``python -m benchmarks.run [--full]``.
 
 One module per paper table/figure + the pruning study + the dry-run
-roofline summary. Exit code 0 iff every qualitative claim check passes.
+roofline summary + the serving-latency study (`repro.serve`). Exit
+code 0 iff every qualitative claim check passes.
 
 Every `api.fit` a suite executes is recorded: the RESOLVED
 `FitConfig.to_dict()` manifest of each run is written to
@@ -25,7 +26,7 @@ def main() -> int:
                     help="paper-scale datasets / longer budgets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,table2,pruning,"
-                         "roofline")
+                         "roofline,serve")
     args = ap.parse_args()
     quick = not args.full
 
@@ -45,7 +46,8 @@ def main() -> int:
 
     from benchmarks import (fig1_mse_vs_time, fig2_rho_effect,
                             pruning_effectiveness, roofline_report,
-                            table1_throughput, table2_final_quality)
+                            serve_latency, table1_throughput,
+                            table2_final_quality)
     suites = {
         "table1": table1_throughput.main,
         "fig1": fig1_mse_vs_time.main,
@@ -53,6 +55,7 @@ def main() -> int:
         "table2": table2_final_quality.main,
         "pruning": pruning_effectiveness.main,
         "roofline": roofline_report.main,
+        "serve": serve_latency.main,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     ok = True

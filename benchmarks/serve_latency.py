@@ -1,0 +1,191 @@
+"""Serving-path latency: predict p50/p99 with the codebook refresh
+OFF vs INLINE vs BACKGROUNDED (`repro.serve.ClusterService`).
+
+The three modes serve the same query stream at the same ingest rate
+(every request also delivers ``rows_per_req`` new points toward the
+codebook — a router that both answers and learns):
+
+  off         no refresh at all: the latency floor + machine noise.
+  inline      the pre-`repro.serve` design (launch/serve.py before this
+              subsystem): the SERVING thread folds the accumulated
+              buffer through `partial_fit` whenever it fills. Inline
+              refreshes must be coarse — folding on every request would
+              tax every request — so the unlucky request that triggers
+              the fold stalls for the whole round: p99 spikes.
+  background  `ClusterService`: a refresher thread drains the same
+              stream in small fixed-shape micro-batches and publishes
+              snapshots; the serving thread only ever swaps a reference.
+
+Headline claim (gates the suite): BACKGROUND p99 stays within 1.5x of
+the refresh-off p99 while INLINE exceeds that bound — background
+refresh keeps tail latency flat at equal codebook freshness budget.
+
+Results land in ``artifacts/bench/serve_latency.json``; the base fit's
+resolved config is recorded in ``manifests.json`` by `benchmarks.run`.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+from repro.api import FitConfig, NestedKMeans
+from repro.serve import ClusterService, IngestQueue
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+K = 50
+QUERY_ROWS = 2048        # per predict request
+ROWS_PER_REQ = 256       # ingest stream tied to request rate
+MICRO = 256              # background refresher micro-batch
+COARSE = 16384           # inline fold size (= 64 requests of stream)
+P99_HEADROOM = 1.5
+
+
+def _fresh(cfg, outcome) -> NestedKMeans:
+    return NestedKMeans(cfg).adopt(outcome)
+
+
+def _warm(km, Q, stream):
+    """Compile every (shape, codebook) executable outside the timed loop."""
+    km.predict(Q)
+    km.partial_fit(stream[:MICRO])
+    km.partial_fit(stream[:COARSE])
+
+
+def _percentiles(lat):
+    return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "max_ms": float(np.max(lat) * 1e3),
+            "n": len(lat)}
+
+
+def bench_off(km, Q, n):
+    import time
+    lat = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        km.predict(Q)
+        lat.append(time.perf_counter() - t0)
+    return np.array(lat)
+
+
+def bench_inline(km, Q, stream, n):
+    import time
+    lat, pos, buf = [], 0, 0
+    folds = 0
+    for _ in range(n):
+        t0 = time.perf_counter()
+        buf += ROWS_PER_REQ
+        if buf >= COARSE:
+            # always a FULL-shape fold (stream holds 2*COARSE rows and
+            # pos wraps inside it), so the warmed executable is reused
+            # and the measured stall is refresh compute, not recompiles
+            km.partial_fit(stream[pos:pos + COARSE])
+            pos = (pos + COARSE) % (len(stream) - COARSE + 1)
+            buf = 0
+            folds += 1
+        km.predict(Q)
+        lat.append(time.perf_counter() - t0)
+    return np.array(lat), folds
+
+
+def bench_background(km, Q, stream, n):
+    import time
+    svc = ClusterService(
+        km, micro_batch=MICRO, flush_after_s=0.02,
+        queue=IngestQueue(max_rows=4 * COARSE, policy="drop-oldest"))
+    svc.start()
+    lat, pos = [], 0
+    for _ in range(n):
+        svc.ingest(stream[pos:pos + ROWS_PER_REQ])
+        pos = (pos + ROWS_PER_REQ) % (len(stream) - ROWS_PER_REQ + 1)
+        t0 = time.perf_counter()
+        svc.predict(Q)
+        lat.append(time.perf_counter() - t0)
+    metrics = svc.export_metrics()
+    svc.stop()
+    return np.array(lat), metrics
+
+
+def main(quick: bool = True):
+    print("== Serving latency: refresh off vs inline vs backgrounded ==")
+    n_req = 600 if quick else 1200
+    # the stream must hold >= 2*COARSE rows so every inline fold is
+    # full-shape (quick's dataset half would be smaller than one fold);
+    # quick only scales the request count, not the fold shapes.
+    from repro.data import synthetic
+    n_base = 20_000
+    X = synthetic.infmnist_like(n_base + 2 * COARSE, seed=0)
+    X_base, stream = X[:n_base], X[n_base:]
+    Q = X[:QUERY_ROWS]
+
+    cfg = FitConfig(k=K, algorithm="tb", b0=2000, rho=math.inf,
+                    bounds="hamerly2", max_rounds=100,
+                    time_budget_s=10.0 if quick else 30.0, seed=0)
+    out = api.fit(X_base, cfg)       # recorded in manifests by run.py
+    print(f"  base codebook: k={K}, rounds={len(out.telemetry)}, "
+          f"converged={out.converged}")
+
+    kms = [_fresh(cfg, out) for _ in range(3)]
+    for km in kms:
+        _warm(km, Q, stream)
+
+    # the off baseline is measured BEFORE and AFTER the other modes and
+    # the worse of the two p99s is the denominator: on a small shared
+    # box the machine-noise floor drifts between phases, and comparing
+    # against the worse floor keeps the claim about refresh placement,
+    # not about which phase caught a scheduler hiccup.
+    off_a = bench_off(kms[0], Q, n_req)
+    inline, folds = bench_inline(kms[1], Q, stream, n_req)
+    background, svc_metrics = bench_background(kms[2], Q, stream, n_req)
+    off_b = bench_off(kms[0], Q, n_req)
+    off = off_a if np.percentile(off_a, 99) >= np.percentile(off_b, 99) \
+        else off_b
+
+    r_off, r_inl, r_bg = (_percentiles(off), _percentiles(inline),
+                          _percentiles(background))
+    ratio_inl = r_inl["p99_ms"] / r_off["p99_ms"]
+    ratio_bg = r_bg["p99_ms"] / r_off["p99_ms"]
+    refreshes = svc_metrics["refresh"]["count"]
+    print(f"  off:        p50 {r_off['p50_ms']:6.1f}ms  "
+          f"p99 {r_off['p99_ms']:6.1f}ms")
+    print(f"  inline:     p50 {r_inl['p50_ms']:6.1f}ms  "
+          f"p99 {r_inl['p99_ms']:6.1f}ms  ({ratio_inl:.2f}x off p99, "
+          f"{folds} folds)")
+    print(f"  background: p50 {r_bg['p50_ms']:6.1f}ms  "
+          f"p99 {r_bg['p99_ms']:6.1f}ms  ({ratio_bg:.2f}x off p99, "
+          f"{refreshes} refreshes)")
+
+    ok = common.check(
+        "background refresh actually ran during serving",
+        refreshes >= 3, f"refreshes={refreshes}")
+    ok &= common.check(
+        f"background p99 within {P99_HEADROOM}x of refresh-off p99",
+        ratio_bg <= P99_HEADROOM, f"ratio={ratio_bg:.2f}")
+    ok &= common.check(
+        f"inline refresh exceeds the {P99_HEADROOM}x p99 bound",
+        ratio_inl > P99_HEADROOM, f"ratio={ratio_inl:.2f}")
+
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "serve_latency.json").write_text(json.dumps({
+        "quick": quick, "n_requests": n_req,
+        "query_rows": QUERY_ROWS, "rows_per_req": ROWS_PER_REQ,
+        "micro_batch": MICRO, "inline_fold_rows": COARSE,
+        "off": r_off, "inline": {**r_inl, "folds": folds},
+        "background": {**r_bg, "ratio_vs_off_p99": ratio_bg,
+                       "service_metrics": svc_metrics},
+        "inline_ratio_vs_off_p99": ratio_inl,
+        "p99_headroom": P99_HEADROOM,
+        "base_fit_config": out.config.to_dict(),
+    }, indent=1))
+    print(f"  wrote {ART / 'serve_latency.json'}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if main(quick=True) else 1)

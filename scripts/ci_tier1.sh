@@ -27,4 +27,8 @@ python -m pytest -x -q -m "not slow" "$@"
 if [ "$#" -eq 0 ]; then
     timeout 600 python -m pytest -x -q tests/test_resume.py \
         -k test_mesh_resume_subprocess
+    # the repro.serve concurrency tests are fast (no slow marker) and
+    # already ran above; re-assert them by name so a future slow-marking
+    # can't silently drop the serving path from the inner loop.
+    timeout 600 python -m pytest -x -q tests/test_serve.py
 fi

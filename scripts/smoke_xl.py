@@ -1,0 +1,64 @@
+"""Centroid-sharded (kmeans_xl) round smoke: exactness vs a Lloyd oracle.
+
+Run via subprocess (tests/test_distributed_xl.py) with 8 forced host
+devices; checks the `make_xl_round` centroid-sharded round AND the
+optimized data-parallel fused round against one exact Lloyd-style
+update from the same centroids. This is the CI gate the XL round keeps
+until it grows its own Engine (see ROADMAP).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import jax.ops
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import make_dp_round, make_xl_round
+from repro.kernels import ref
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+rng = np.random.default_rng(0)
+k, d, n = 16, 32, 8192
+centers = rng.normal(size=(8, d)) * 5
+X = (centers[rng.integers(0, 8, n)]
+     + rng.normal(size=(n, d))).astype(np.float32)
+C0 = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+
+# oracle: one exact lloyd-style round from C0
+d2o = ref.pairwise_dist2(jnp.asarray(X), C0)
+ao = jnp.argmin(d2o, axis=1)
+So = jax.ops.segment_sum(jnp.asarray(X), ao, num_segments=k)
+vo = jax.ops.segment_sum(jnp.ones(n), ao, num_segments=k)
+Co = jnp.where((vo > 0)[:, None], So / jnp.maximum(vo, 1)[:, None], C0)
+
+# centroid-sharded XL round: k=16 sharded over model=2
+Xd = jax.device_put(jnp.asarray(X), NamedSharding(mesh, P(("data",), None)))
+Cd = jax.device_put(C0, NamedSharding(mesh, P("model", None)))
+Sd = jax.device_put(jnp.zeros((k, d), jnp.float32),
+                    NamedSharding(mesh, P("model", None)))
+vd = jax.device_put(jnp.zeros((k,), jnp.float32),
+                    NamedSharding(mesh, P("model")))
+round_fn = make_xl_round(mesh, k=k, data_axes=("data",),
+                         model_axis="model")
+C1, S1, v1, a, dd, d2, grow, r, mse = round_fn(Xd, Cd, Sd, vd)
+
+err_a = int(jnp.sum(a.astype(jnp.int32) != ao.astype(jnp.int32)))
+err_C = float(jnp.max(jnp.abs(C1 - Co)))
+print(f"xl round: assign mismatches={err_a} "
+      f"max|C-C_oracle|={err_C:.2e} mse={float(mse):.3f}")
+assert err_a == 0 and err_C < 1e-3
+
+# data-parallel fused round (the optimized kmeans_xl path)
+dpr = make_dp_round(mesh)
+Xd8 = jax.device_put(jnp.asarray(X),
+                     NamedSharding(mesh, P(("data", "model"), None)))
+C1b, S1b, v1b, a_b, d_b, grow_b, r_b, mse_b = dpr(Xd8, C0)
+err_a2 = int(jnp.sum(a_b.astype(jnp.int32) != ao.astype(jnp.int32)))
+err_C2 = float(jnp.max(jnp.abs(C1b - Co)))
+print(f"dp round: assign mismatches={err_a2} "
+      f"max|C-C_oracle|={err_C2:.2e}")
+assert err_a2 == 0 and err_C2 < 1e-3
+print("xl smoke OK")

@@ -475,24 +475,23 @@ class _MeshRun(EngineRun):
 
         from repro.core.distributed import make_sharded_round, shard_state
 
+        from repro.data.pipeline import nested_shard_layout
+
         data_axes = config.data_axes
         n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
-        rng = np.random.default_rng(config.seed)
         X = np.asarray(X)
         N_real = X.shape[0]
-        pad = -N_real % n_shards
-        if pad:
-            # structural padding at the END of the shuffle: padded rows
-            # sit at the tail of every shard and b_local is capped below
-            # them, so they can never enter a nested prefix.
-            X = np.concatenate([X, np.repeat(X[:1], pad, axis=0)])
-        N = X.shape[0]
-        perm = (np.concatenate([rng.permutation(N_real),
-                                np.arange(N_real, N)])
-                if config.shuffle else np.arange(N))
-        # interleave so shard s gets global-shuffle positions s::n_shards
-        # -> the union of shard prefixes of size b/n_shards IS the global
-        # prefix of size b of the shuffle.
+        # the placement (shuffle + structural tail pads + round-robin
+        # interleave) is shared with data.pipeline.KMeansShardedSource;
+        # padded rows sit at the tail of every shard and b_local is
+        # capped below them, so they can never enter a nested prefix.
+        lay = nested_shard_layout(N_real, n_shards, seed=config.seed,
+                                  shuffle=config.shuffle)
+        if lay.n_storage > N_real:
+            X = np.concatenate(
+                [X, np.repeat(X[:1], lay.n_storage - N_real, axis=0)])
+        N = lay.n_storage
+        perm = lay.perm
         Xh = X[perm].reshape(N // n_shards, n_shards, -1).transpose(1, 0, 2)
         self._Xd = jax.device_put(
             jnp.asarray(Xh.reshape(N, -1)),
@@ -524,10 +523,8 @@ class _MeshRun(EngineRun):
         self._n_real = N_real if N_real % n_shards else None
         # storage row shard*(N/s)+i holds shuffle position i*s+shard;
         # positions >= N_real are structural pads
-        pos = np.arange(N).reshape(N // n_shards, n_shards).T.ravel()
-        self._pos = pos
-        orig = perm[pos]
-        self.orig_index = np.where(orig < N_real, orig, -1)
+        self._pos = lay.pos
+        self.orig_index = lay.orig_index()
         self.n_points = N_real
 
     def nested_step(self, state, b, capacity):

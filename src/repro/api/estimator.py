@@ -14,7 +14,8 @@ refining the codebook without re-touching old data.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import threading
+from typing import Any, Dict, List, Optional
 
 import time
 
@@ -51,6 +52,13 @@ class NestedKMeans:
       telemetry_         List[Telemetry], one per host round
       converged_         bool
       n_rounds_          len(telemetry_)
+
+    Thread-safety: `fit` / `partial_fit` / `adopt` serialise on an
+    internal lock, so a background refresher may stream batches while
+    other threads call `predict` / `transform` — the readers never take
+    the lock (they read `_stats` once; the whole stats pytree is swapped
+    atomically, never mutated in place). `export_codebook` snapshots the
+    codebook under the same lock for `repro.serve`.
     """
 
     def __init__(self, config: FitConfig, *, engine: Optional[Engine] = None,
@@ -62,6 +70,9 @@ class NestedKMeans:
         self._outcome: Optional[FitOutcome] = None
         self._stats = None          # streaming ClusterStats (partial_fit)
         self._outcome_stale = False  # partial_fit moved the centroids
+        # serialises the WRITERS (fit/partial_fit/adopt); readers are
+        # lock-free — they load self._stats once and work on that pytree
+        self._lock = threading.RLock()
 
     # -- fitting ------------------------------------------------------------
 
@@ -76,37 +87,38 @@ class NestedKMeans:
         elastically across a shard-count (or local<->mesh) change. With
         no checkpoint on disk yet the fit simply starts fresh.
         """
-        cfg = self.config.resolve(int(np.asarray(X).shape[0]))
-        resume_from = None
-        if resume:
-            if cfg.checkpoint is None:
-                raise ValueError(
-                    "fit(resume=True) requires config.checkpoint")
-            store = CheckpointStore(cfg.checkpoint.checkpoint_dir,
-                                    keep=cfg.checkpoint.keep)
-            if store.latest_step() is not None:
-                extra = store.read_extra()
-                saved = (extra or {}).get("config")
-                if saved:
-                    want = cfg.to_dict()
-                    bad = [k for k in _RESUME_KEYS
-                           if k in saved and saved[k] != want[k]]
-                    if bad:
-                        raise ValueError(
-                            f"checkpoint manifest disagrees with the "
-                            f"resuming config on {bad}; refusing to "
-                            f"restore a foreign fit")
-                resume_from = store
-        run = self.engine.begin(X, cfg, X_val=X_val, init_C=init_C)
-        out = run_loop(run, cfg, on_round=self.on_round,
-                       resume_from=resume_from)
-        self._outcome = out
-        self._stats = out.state.stats
-        self._outcome_stale = False
-        # copy: later partial_fit records must not mutate the outcome's
-        # own telemetry history
-        self.telemetry_ = list(out.telemetry)
-        return self
+        with self._lock:
+            cfg = self.config.resolve(int(np.asarray(X).shape[0]))
+            resume_from = None
+            if resume:
+                if cfg.checkpoint is None:
+                    raise ValueError(
+                        "fit(resume=True) requires config.checkpoint")
+                store = CheckpointStore(cfg.checkpoint.checkpoint_dir,
+                                        keep=cfg.checkpoint.keep)
+                if store.latest_step() is not None:
+                    extra = store.read_extra()
+                    saved = (extra or {}).get("config")
+                    if saved:
+                        want = cfg.to_dict()
+                        bad = [k for k in _RESUME_KEYS
+                               if k in saved and saved[k] != want[k]]
+                        if bad:
+                            raise ValueError(
+                                f"checkpoint manifest disagrees with the "
+                                f"resuming config on {bad}; refusing to "
+                                f"restore a foreign fit")
+                    resume_from = store
+            run = self.engine.begin(X, cfg, X_val=X_val, init_C=init_C)
+            out = run_loop(run, cfg, on_round=self.on_round,
+                           resume_from=resume_from)
+            self._outcome = out
+            self._stats = out.state.stats
+            self._outcome_stale = False
+            # copy: later partial_fit records must not mutate the
+            # outcome's own telemetry history
+            self.telemetry_ = list(out.telemetry)
+            return self
 
     def partial_fit(self, X) -> "NestedKMeans":
         """Fold one streaming batch into the codebook (one nested round).
@@ -122,40 +134,81 @@ class NestedKMeans:
                 "partial_fit currently runs on the local engine only; "
                 "stream with backend='local' (mesh streaming is a "
                 "ROADMAP item)")
-        X = np.asarray(X)
-        cfg = self.config.resolve(int(X.shape[0]))
-        Xd = jnp.asarray(X)
-        state = init_state(Xd, cfg.k, bounds=cfg.bounds)
-        if self._stats is not None:
-            # carry the running statistics; bounds state restarts per
-            # batch (new points have no history to bound against)
-            state = dataclasses.replace(state, stats=self._stats)
-        elif X.shape[0] < cfg.k:
+        with self._lock:
+            X = np.asarray(X)
+            cfg = self.config.resolve(int(X.shape[0]))
+            Xd = jnp.asarray(X)
+            state = init_state(Xd, cfg.k, bounds=cfg.bounds)
+            if self._stats is not None:
+                # carry the running statistics; bounds state restarts per
+                # batch (new points have no history to bound against)
+                state = dataclasses.replace(state, stats=self._stats)
+            elif X.shape[0] < cfg.k:
+                raise ValueError(
+                    f"first partial_fit batch must have >= k={cfg.k} "
+                    f"rows (repro.serve.IngestQueue accumulates sub-k "
+                    f"contributions into a big-enough first batch)")
+            t_prev = self.telemetry_[-1].t if self.telemetry_ else 0.0
+            t0 = time.perf_counter()
+            new_state, info = nested_jit(
+                Xd, state, b=int(X.shape[0]), rho=cfg.rho,
+                bounds=cfg.bounds, capacity=None, use_shalf=cfg.use_shalf,
+                kernel_backend=cfg.kernel_backend)
+            jax.block_until_ready(new_state.stats.C)
+            self._stats = new_state.stats
+            if self._outcome is not None:
+                # the centroids have moved past the fit's outcome: its
+                # labels/state no longer describe this estimator
+                self._outcome_stale = True
+            rec = Telemetry(
+                round=len(self.telemetry_),
+                t=t_prev + time.perf_counter() - t0, b=int(info.n_active),
+                batch_mse=float(info.batch_mse),
+                n_changed=int(info.n_changed),
+                n_recomputed=int(info.n_recomputed),
+                grow=bool(info.grow), r_median=float(info.r_median))
+            self.telemetry_.append(rec)
+            if self.on_round:
+                self.on_round(rec)
+            return self
+
+    def adopt(self, outcome: FitOutcome) -> "NestedKMeans":
+        """Rehydrate this estimator from a previously produced outcome.
+
+        Lets a serving process rebuild an estimator from a `FitOutcome`
+        computed elsewhere (e.g. by `repro.api.fit` in a training job)
+        and keep streaming into it with `partial_fit`.
+        """
+        if outcome.config.k != self.config.k:
             raise ValueError(
-                f"first partial_fit batch must have >= k={cfg.k} rows")
-        t_prev = self.telemetry_[-1].t if self.telemetry_ else 0.0
-        t0 = time.perf_counter()
-        new_state, info = nested_jit(
-            Xd, state, b=int(X.shape[0]), rho=cfg.rho, bounds=cfg.bounds,
-            capacity=None, use_shalf=cfg.use_shalf,
-            kernel_backend=cfg.kernel_backend)
-        jax.block_until_ready(new_state.stats.C)
-        self._stats = new_state.stats
-        if self._outcome is not None:
-            # the centroids have moved past the fit's outcome: its
-            # labels/state no longer describe this estimator
-            self._outcome_stale = True
-        rec = Telemetry(
-            round=len(self.telemetry_),
-            t=t_prev + time.perf_counter() - t0, b=int(info.n_active),
-            batch_mse=float(info.batch_mse),
-            n_changed=int(info.n_changed),
-            n_recomputed=int(info.n_recomputed),
-            grow=bool(info.grow), r_median=float(info.r_median))
-        self.telemetry_.append(rec)
-        if self.on_round:
-            self.on_round(rec)
-        return self
+                f"cannot adopt an outcome fitted with "
+                f"k={outcome.config.k} into an estimator configured "
+                f"for k={self.config.k}")
+        with self._lock:
+            self._outcome = outcome
+            self._stats = outcome.state.stats
+            self._outcome_stale = False
+            self.telemetry_ = list(outcome.telemetry)
+            return self
+
+    def export_codebook(self) -> Dict[str, Any]:
+        """Atomic host-side copy of the codebook, for snapshot publishers.
+
+        Returns ``{"centroids", "counts", "n_rounds", "batch_mse"}``
+        captured under the writer lock, so a concurrent `partial_fit`
+        can never be observed half-applied. The arrays are fresh numpy
+        copies owned by the caller.
+        """
+        with self._lock:
+            self._require_fitted()
+            return {
+                "centroids": np.array(self._stats.C, dtype=np.float32,
+                                      copy=True),
+                "counts": np.array(self._stats.v, dtype=np.float32,
+                                   copy=True),
+                "n_rounds": len(self.telemetry_),
+                "batch_mse": self.inertia_,
+            }
 
     # -- fitted attributes --------------------------------------------------
 

@@ -5,12 +5,14 @@
         --gen 16
 
 With ``--codebook K`` the server also maintains a k-means VQ codebook
-over the token-embedding table through `repro.api` (the unified
-estimator surface): the codebook is fitted once at startup and then
-*streamed* — every served batch's embeddings are folded in with
-`NestedKMeans.partial_fit`, the serving-path primitive for keeping a
-router/dedup codebook fresh under live traffic. Decode output is tagged
-with its codebook cell.
+over the token-embedding table, served through `repro.serve`: the
+codebook is fitted once at startup (checkpointable with
+``--checkpoint-dir`` / ``--save-every``, resumable with ``--resume``)
+and then wrapped in a `ClusterService` — every served batch's
+embeddings are INGESTED, not folded inline, so the background refresher
+keeps the codebook fresh while decode traffic reads versioned snapshots
+without ever waiting on a `partial_fit`. Decode output is tagged with
+its codebook cell.
 """
 import argparse
 import time
@@ -22,25 +24,34 @@ import numpy as np
 from repro import configs
 from repro.api import CheckpointConfig, FitConfig, NestedKMeans
 from repro.models import model as M
+from repro.serve import ClusterService, IngestQueue
 from repro.train import step as tstep
 
 
 def build_codebook(E: np.ndarray, k: int, seed: int, *,
                    checkpoint_dir: str | None = None,
+                   save_every: int = 20,
                    resume: bool = False) -> NestedKMeans:
     """Fit the embedding-table codebook through the unified api.
 
     With ``checkpoint_dir`` the fit checkpoints its full loop state
-    in-loop and (``resume=True``) continues a killed fit bit-identically
-    instead of restarting.
+    every ``save_every`` rounds and (``resume=True``) continues a killed
+    fit bit-identically instead of restarting. ``resume`` without a
+    checkpoint dir is a loud error — silently refitting from scratch is
+    exactly what a resuming operator does not want.
     """
-    ck = (CheckpointConfig(checkpoint_dir=checkpoint_dir, save_every=20)
+    if resume and not checkpoint_dir:
+        raise ValueError(
+            "--resume needs --checkpoint-dir: there is nowhere to "
+            "resume from without a checkpoint store")
+    ck = (CheckpointConfig(checkpoint_dir=checkpoint_dir,
+                           save_every=save_every)
           if checkpoint_dir else None)
     km = NestedKMeans(FitConfig(k=k, algorithm="tb", rho=float("inf"),
                                 b0=min(2 * k, E.shape[0]),
                                 bounds="hamerly2", max_rounds=200,
                                 seed=seed, checkpoint=ck))
-    km.fit(E, resume=resume and ck is not None)
+    km.fit(E, resume=resume)
     return km
 
 
@@ -54,7 +65,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--codebook", type=int, default=0, metavar="K",
                     help="maintain a K-cell VQ codebook over the "
-                         "embedding table via repro.api")
+                         "embedding table via repro.serve")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="checkpoint the codebook fit in-loop here")
+    ap.add_argument("--save-every", type=int, default=20,
+                    help="codebook checkpoint cadence in host rounds")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed codebook fit from "
+                         "--checkpoint-dir (error without it)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -65,15 +83,28 @@ def main():
     cache_len = P + args.gen + (cfg.encoder.n_ctx
                                 if cfg.family == "vlm" else 0)
 
-    codebook = None
+    service = None
+    E = None
     if args.codebook:
         E = np.asarray(params["embed"], np.float32)
         t0 = time.time()
-        codebook = build_codebook(E, args.codebook, args.seed)
+        codebook = build_codebook(E, args.codebook, args.seed,
+                                  checkpoint_dir=args.checkpoint_dir,
+                                  save_every=args.save_every,
+                                  resume=args.resume)
         print(f"codebook: k={args.codebook} over {E.shape} embeddings "
               f"in {time.time() - t0:.2f}s "
               f"(rounds={codebook.n_rounds_}, "
               f"converged={codebook.converged_})")
+        # background refresh: served embeddings are queued, folded in by
+        # the refresher thread, and published as versioned snapshots;
+        # dedup on token id keeps each embedding's contribution unique
+        service = ClusterService(
+            codebook, micro_batch=256, flush_after_s=0.05,
+            queue=IngestQueue(max_rows=4096, dedup=True)).start()
+    elif args.resume or args.checkpoint_dir:
+        ap.error("--checkpoint-dir/--resume only apply to the codebook "
+                 "fit; pass --codebook K")
 
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, P)))}
     if cfg.family == "encdec":
@@ -98,6 +129,11 @@ def main():
         logits, cache = decode(params, tok, cache)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out.append(np.asarray(tok))
+        if service is not None:
+            # stream the served embeddings toward the refresher; token
+            # ids double as dedup keys ("each sample exactly once")
+            ids = np.asarray(tok).ravel()
+            service.ingest(E[ids], ids=ids.tolist())
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
 
@@ -107,17 +143,18 @@ def main():
           f"({B * (args.gen - 1) / max(t_decode, 1e-9):.0f} tok/s)")
     print("generated token ids (row 0):", gen[0].tolist())
 
-    if codebook is not None:
-        E = np.asarray(params["embed"], np.float32)
+    if service is not None:
         # tag output tokens with their codebook cell (router/dedup view)
-        cells = codebook.predict(E[gen[0]])
+        cells = service.predict(E[gen[0]])
         print("codebook cells  (row 0):", cells.tolist())
-        # streaming refinement: fold this batch's served embeddings in
-        served = E[np.unique(gen)]
-        codebook.partial_fit(served)
-        rec = codebook.telemetry_[-1]
-        print(f"codebook partial_fit: +{rec.b} embeddings, "
-              f"{rec.n_changed} reassigned, batch MSE {rec.batch_mse:.5f}")
+        service.stop()               # final flush of the ingest queue
+        m = service.export_metrics()
+        snap = service.snapshot
+        print(f"codebook service: {m['refresh']['count']} background "
+              f"refreshes over {m['refresh']['rows']} embeddings, "
+              f"snapshot v{snap.version} "
+              f"(deduped={m['queue']['deduped']}, "
+              f"batch MSE {snap.batch_mse:.5f})")
 
 
 if __name__ == "__main__":

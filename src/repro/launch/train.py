@@ -122,8 +122,12 @@ def main():
         # growth-schedule state) and resumes if a prior run was killed
         ckpt_dir = (f"{args.ckpt_dir}/codebook" if args.ckpt_dir
                     else None)
+        # --resume here is opportunistic ("continue if a checkpoint
+        # exists"), so only request it when there is a store to resume
+        # from — build_codebook errors loudly on resume without one
         km = build_codebook(E, args.codebook, args.seed,
-                            checkpoint_dir=ckpt_dir, resume=args.resume)
+                            checkpoint_dir=ckpt_dir,
+                            resume=args.resume and ckpt_dir is not None)
         sizes = np.bincount(km.predict(E), minlength=args.codebook)
         print(f"embedding codebook (k={args.codebook}): "
               f"VQ-MSE {-km.score(E) / E.shape[0]:.6f} "

@@ -1,0 +1,31 @@
+"""repro.serve — streaming clustering service over `repro.api`.
+
+    from repro.api import FitConfig, NestedKMeans
+    from repro.serve import ClusterService
+
+    svc = ClusterService(NestedKMeans(FitConfig(k=50)),
+                         micro_batch=2048).start()
+    svc.ingest(stream_rows)          # any size, even < k
+    labels = svc.predict(X)          # lock-free, never blocked by refresh
+    svc.stop()
+
+The first package in the repo designed for concurrent callers: readers
+answer from immutable versioned `CodebookSnapshot`s swapped atomically,
+producers feed a bounded `IngestQueue` (block / drop-oldest / reservoir
+backpressure, optional per-point dedup), and one background refresher
+thread drains the queue through `NestedKMeans.partial_fit` — escalating
+to a full checkpointed re-`fit` when the batch-MSE trend says the
+codebook has drifted. `ServeMetrics.to_dict()` exports it all for the
+bench harness.
+"""
+from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.queue import POLICIES, IngestQueue
+from repro.serve.service import ClusterService
+from repro.serve.snapshot import (CodebookSnapshot, SnapshotRef,
+                                  codebook_checksum)
+
+__all__ = [
+    "ClusterService", "IngestQueue", "POLICIES",
+    "CodebookSnapshot", "SnapshotRef", "codebook_checksum",
+    "ServeMetrics", "LatencyHistogram",
+]

@@ -1,0 +1,27 @@
+"""CI gate for the centroid-sharded kmeans_xl round.
+
+Promoted from scripts/smoke_distributed.py so the XL round — which has
+no Engine driving it yet (ROADMAP: next open Engine slot) — is
+regression-tested, not just dev-smoked. Subprocess-isolated because it
+forces 8 host devices via XLA_FLAGS, which must not leak into the rest
+of the test session.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_xl_round_subprocess():
+    """make_xl_round + make_dp_round match an exact Lloyd oracle on a
+    (4, 2) mesh with centroids sharded over the model axis."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "scripts/smoke_xl.py"],
+                       env=env, capture_output=True, text=True,
+                       timeout=600, cwd=repo)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "xl smoke OK" in r.stdout

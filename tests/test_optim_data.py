@@ -77,6 +77,56 @@ def test_kmeans_sharded_source_nested_prefix():
                                   np.sort(expect.ravel()))
 
 
+def test_kmeans_sharded_source_pads_like_mesh_engine():
+    """n % n_shards != 0: host source matches the MeshEngine placement.
+
+    `_MeshRun` builds its device layout from the SAME
+    `nested_shard_layout` the source uses; this test independently
+    recomputes the engine's reshape/transpose interleave and checks the
+    source against it, so the shared helper can't silently change
+    semantics for one consumer.
+    """
+    n_real, n_shards, seed = 67, 4, 3
+    X = np.arange(n_real, dtype=np.float32)[:, None] + 1.0
+    src = pipeline.KMeansShardedSource(X, n_shards=n_shards, seed=seed)
+    lay = src.layout
+    assert lay.n_storage == 68 and lay.n_storage % n_shards == 0
+
+    # the engine's device placement: pad with X[:1], shuffle, interleave
+    Xp = np.concatenate([X, np.repeat(X[:1], lay.n_storage - n_real,
+                                      axis=0)])
+    Xh = Xp[lay.perm].reshape(lay.n_storage // n_shards, n_shards, -1) \
+        .transpose(1, 0, 2)
+    for s in range(n_shards):
+        np.testing.assert_array_equal(src.shard(s), Xh[s])
+        nv = src.n_valid(s)
+        # real rows are prefix-contiguous; the tail is structural pads
+        assert np.all(src.shard(s)[nv:] == X[0])
+    # per-shard n_valid matches the engine's mask semantics: every real
+    # row is valid on exactly one shard
+    assert int(lay.n_valid.sum()) == n_real
+    allv = np.concatenate([src.shard_valid(s) for s in range(n_shards)])
+    np.testing.assert_array_equal(np.sort(allv.ravel()),
+                                  np.sort(X.ravel()))
+    # orig_index: -1 exactly on the pad storage rows
+    oi = lay.orig_index()
+    assert int((oi < 0).sum()) == lay.n_storage - n_real
+    np.testing.assert_array_equal(np.sort(oi[oi >= 0]), np.arange(n_real))
+
+
+def test_kmeans_sharded_source_prefix_property_with_pads():
+    """Union of per-shard prefixes == global shuffle prefix, pads or not."""
+    X = np.arange(37, dtype=np.float32)[:, None]
+    src = pipeline.KMeansShardedSource(X, n_shards=4, seed=1)
+    b = 16
+    union = np.concatenate([src.shard(s)[: b // 4] for s in range(4)])
+    expect = src.global_prefix(b)
+    np.testing.assert_array_equal(np.sort(union.ravel()),
+                                  np.sort(expect.ravel()))
+    with pytest.raises(ValueError):
+        src.global_prefix(38)       # pads may never enter a prefix
+
+
 def test_lm_batches_seekable():
     lb = pipeline.LMBatches(vocab=100, batch=4, seq=16, n_tokens=10_000,
                             seed=0)

@@ -1,0 +1,304 @@
+"""repro.serve: snapshots, ingest queue, ClusterService concurrency."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import FitConfig, NestedKMeans, NotFittedError
+from repro.serve import (ClusterService, CodebookSnapshot, IngestQueue,
+                         SnapshotRef, codebook_checksum)
+
+
+def wait_until(pred, timeout=20.0, dt=0.005):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(dt)
+    return pred()
+
+
+# -- IngestQueue ------------------------------------------------------------
+
+def rows(n, d=4, base=0.0):
+    return (np.arange(n * d, dtype=np.float32).reshape(n, d) + base)
+
+
+def test_queue_accumulates_and_drains_fifo():
+    q = IngestQueue(max_rows=100)
+    assert q.put(rows(3)) == 3
+    assert q.put(rows(2, base=100.0)) == 2
+    got = q.get_batch(10)
+    assert got is not None
+    X, ids = got
+    assert X.shape == (5, 4) and ids == [None] * 5
+    np.testing.assert_array_equal(X[:3], rows(3))
+    assert q.depth == 0
+
+
+def test_queue_block_policy_times_out_and_counts_rejects():
+    q = IngestQueue(max_rows=4, policy="block")
+    assert q.put(rows(4)) == 4
+    t0 = time.time()
+    assert q.put(rows(2), timeout=0.05) == 0       # full: rejected
+    assert time.time() - t0 >= 0.04
+    s = q.stats()
+    assert s["dropped_full"] == 2 and s["accepted"] == 4
+    # a consumer makes room; a blocked producer then gets through
+    def unblock():
+        time.sleep(0.05)
+        q.get_batch(2)
+    threading.Thread(target=unblock).start()
+    assert q.put(rows(1), timeout=5.0) == 1
+
+
+def test_queue_drop_oldest_policy():
+    q = IngestQueue(max_rows=4, policy="drop-oldest")
+    q.put(rows(4))                      # rows 0..3
+    assert q.put(rows(2, base=100.0)) == 2
+    X, _ = q.get_batch(10)
+    assert X.shape == (4, 4)
+    # the two OLDEST rows were evicted; newest survive
+    np.testing.assert_array_equal(X[-2:], rows(2, base=100.0))
+    assert q.stats()["evicted"] == 2
+
+
+def test_queue_reservoir_policy_is_bounded_sample():
+    q = IngestQueue(max_rows=32, policy="reservoir", seed=0)
+    for i in range(100):
+        q.put(rows(8, base=float(i * 1000)))
+    assert q.depth == 32                # never exceeds the bound
+    s = q.stats()
+    assert s["offered"] == 800
+    assert s["evicted"] + s["dropped_full"] == 800 - 32
+    X, _ = q.get_batch(100)
+    # a real sample of the whole stream, not just the newest rows:
+    # something from the first half must have survived (p ~ 1 - 2^-32)
+    assert X.shape[0] == 32
+    assert (X[:, 0] < 400 * 1000).any()
+
+
+def test_queue_dedup_each_id_contributes_once():
+    q = IngestQueue(max_rows=100, dedup=True)
+    assert q.put(rows(3), ids=["a", "b", "c"]) == 3
+    assert q.put(rows(3), ids=["b", "c", "d"]) == 1   # only "d" is new
+    assert q.stats()["deduped"] == 2
+    X, ids = q.get_batch(10)
+    assert ids == ["a", "b", "c", "d"]
+    # dedup survives draining: an id can never contribute twice
+    assert q.put(rows(1), ids=["a"]) == 0
+
+
+def test_queue_dedup_rejected_rows_may_be_redelivered():
+    """An id is only 'seen' once its row is ACCEPTED: a row bounced by
+    backpressure can be retried later without tripping the dedup."""
+    q = IngestQueue(max_rows=2, policy="block", dedup=True)
+    assert q.put(rows(2), ids=["a", "b"]) == 2
+    assert q.put(rows(1, base=50.0), ids=["c"], timeout=0.02) == 0
+    q.get_batch(2)                      # make room
+    assert q.put(rows(1, base=50.0), ids=["c"]) == 1   # retry succeeds
+    assert q.stats()["deduped"] == 0
+
+
+def test_queue_blocked_put_raises_on_close():
+    """A producer blocked on a full queue fails loudly when the queue is
+    closed under it (refresher death) instead of silently dropping."""
+    q = IngestQueue(max_rows=1, policy="block")
+    q.put(rows(1))
+    threading.Timer(0.05, q.close).start()
+    with pytest.raises(RuntimeError):
+        q.put(rows(1), timeout=10.0)
+
+
+def test_queue_get_batch_allow_short_false_waits_for_min():
+    q = IngestQueue(max_rows=100)
+    q.put(rows(3))
+    assert q.get_batch(10, min_rows=5, timeout=0.05,
+                       allow_short=False) is None
+    assert q.depth == 3                 # nothing drained
+    got = q.get_batch(10, min_rows=5, timeout=0.05)   # short flush ok
+    assert got is not None and got[0].shape[0] == 3
+
+
+def test_queue_close_wakes_and_drains():
+    q = IngestQueue(max_rows=100)
+    q.put(rows(2))
+    q.close()
+    with pytest.raises(RuntimeError):
+        q.put(rows(1))
+    assert q.get_batch(10, min_rows=50, timeout=5.0)[0].shape[0] == 2
+    assert q.get_batch(10, timeout=0.01) is None
+
+
+# -- snapshots --------------------------------------------------------------
+
+def test_snapshot_immutable_and_checksummed():
+    exported = {"centroids": np.ones((4, 3), np.float32),
+                "counts": np.ones((4,), np.float32),
+                "n_rounds": 1, "batch_mse": 0.5}
+    snap = CodebookSnapshot.create(1, exported)
+    assert snap.verify()
+    with pytest.raises(ValueError):
+        snap.centroids[0, 0] = 9.0      # read-only
+    a = snap.predict(np.zeros((2, 3), np.float32))
+    assert a.shape == (2,)
+    d = snap.transform(np.zeros((2, 3), np.float32))
+    assert d.shape == (2, 4)
+
+
+def test_snapshot_ref_rejects_version_regression():
+    exported = {"centroids": np.ones((2, 2), np.float32),
+                "counts": np.ones((2,), np.float32),
+                "n_rounds": 1, "batch_mse": 0.5}
+    ref = SnapshotRef()
+    ref.publish(CodebookSnapshot.create(3, exported))
+    with pytest.raises(ValueError):
+        ref.publish(CodebookSnapshot.create(3, exported))
+    assert ref.load().version == 3
+
+
+# -- ClusterService ---------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def stream_blobs():
+    from repro.data.synthetic import gaussian_blobs
+    X, _ = gaussian_blobs(6000, k=8, dim=8, spread=5.0, seed=0)
+    return X
+
+
+def test_service_first_batch_accumulates_below_k(stream_blobs):
+    """partial_fit via the queue accepts sub-k batches: the service
+    publishes once >= k rows have ACCUMULATED from tiny ingests."""
+    k = 32
+    km = NestedKMeans(FitConfig(k=k, b0=64, seed=0))
+    svc = ClusterService(km, micro_batch=128, flush_after_s=0.02).start()
+    try:
+        with pytest.raises(NotFittedError):
+            svc.predict(stream_blobs[:4])
+        for i in range(0, 4 * k, 5):        # chunks of 5 << k
+            svc.ingest(stream_blobs[i:i + 5])
+        assert wait_until(lambda: svc.snapshot is not None)
+        labels = svc.predict(stream_blobs[:64])
+        assert labels.shape == (64,) and labels.max() < k
+        v1 = svc.snapshot.version
+        # sub-k batches keep streaming AFTER the first publication too
+        svc.ingest(stream_blobs[200:207])
+        assert wait_until(lambda: svc.queue.depth == 0)
+    finally:
+        svc.stop()
+    assert svc.snapshot.version > v1        # the tail flush refreshed
+    assert svc.export_metrics()["refresh"]["rows"] >= 4 * k
+
+
+def test_service_concurrent_predict_no_torn_reads(stream_blobs):
+    """Hammer predict from several threads while the refresher runs:
+    every observed snapshot verifies its checksum (no torn reads) and
+    versions are monotone per reader."""
+    k = 16
+    km = NestedKMeans(FitConfig(k=k, b0=256, seed=0))
+    km.fit(stream_blobs[:2000])
+    svc = ClusterService(km, micro_batch=256, flush_after_s=0.01).start()
+    stop = threading.Event()
+    errors, n_reads = [], [0] * 4
+
+    def reader(slot):
+        last = 0
+        Q = stream_blobs[slot * 100:slot * 100 + 50]
+        while not stop.is_set():
+            snap = svc.snapshot
+            if not snap.verify():
+                errors.append(f"torn read at v{snap.version}")
+                return
+            if snap.version < last:
+                errors.append(f"version regressed {last}->{snap.version}")
+                return
+            last = snap.version
+            labels = svc.predict(Q)
+            if labels.shape != (50,) or labels.max() >= k:
+                errors.append(f"bad labels {labels.shape}")
+                return
+            n_reads[slot] += 1
+
+    readers = [threading.Thread(target=reader, args=(i,))
+               for i in range(4)]
+    for t in readers:
+        t.start()
+    v0 = svc.snapshot.version
+    pos = 2000
+    t0 = time.time()
+    while time.time() - t0 < 2.0:
+        svc.ingest(stream_blobs[pos:pos + 100])
+        pos = 2000 + (pos - 2000 + 100) % 3900
+        time.sleep(0.002)
+    # refreshes must actually have happened while readers hammered
+    assert wait_until(lambda: svc.snapshot.version > v0 + 3)
+    stop.set()
+    for t in readers:
+        t.join()
+    svc.stop()
+    assert not errors, errors
+    assert all(n > 0 for n in n_reads)
+    m = svc.export_metrics()
+    assert m["refresh"]["count"] >= 4
+    assert m["predict"]["requests"] == sum(n_reads)
+
+
+def test_service_snapshot_isolated_from_later_refreshes(stream_blobs):
+    """A reader holding an old snapshot keeps a consistent codebook even
+    after many refreshes replaced it."""
+    k = 8
+    km = NestedKMeans(FitConfig(k=k, b0=128, seed=0))
+    km.fit(stream_blobs[:1000])
+    svc = ClusterService(km, micro_batch=64, flush_after_s=0.01).start()
+    held = svc.snapshot
+    C_held = held.centroids.copy()
+    for i in range(10):
+        svc.ingest(stream_blobs[1000 + 64 * i:1000 + 64 * (i + 1)])
+    assert wait_until(lambda: svc.snapshot.version >= held.version + 3)
+    svc.stop()
+    assert held.verify()
+    np.testing.assert_array_equal(held.centroids, C_held)
+    assert svc.snapshot.version > held.version
+
+
+def test_service_escalates_on_drift(stream_blobs):
+    """A manual escalation re-fits on the history reservoir without
+    invalidating reads, and bumps the snapshot version."""
+    k = 8
+    km = NestedKMeans(FitConfig(k=k, b0=128, max_rounds=30, seed=0))
+    km.fit(stream_blobs[:1000])
+    svc = ClusterService(km, micro_batch=128, flush_after_s=0.01,
+                         history_rows=1024).start()
+    svc.ingest(stream_blobs[1000:2024])
+    assert wait_until(lambda: svc.queue.depth == 0)
+    svc.stop()
+    v_before = svc.snapshot.version
+    svc.escalate()
+    assert svc.snapshot.version > v_before
+    assert svc.export_metrics()["refresh"]["escalations"] == 1
+    assert svc.snapshot.verify()
+
+
+def test_estimator_partial_fit_is_thread_safe(stream_blobs):
+    """Two writers racing partial_fit: every batch's contribution lands
+    exactly once (total counts == total rows folded)."""
+    k = 8
+    km = NestedKMeans(FitConfig(k=k, b0=128, seed=0))
+    km.fit(stream_blobs[:1000])
+    n0 = float(np.sum(km.counts_))
+    per_thread, batches = 100, 8
+
+    def writer(tid):
+        for j in range(batches):
+            lo = 1000 + (tid * batches + j) * per_thread
+            km.partial_fit(stream_blobs[lo:lo + per_thread])
+
+    ws = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    assert float(np.sum(km.counts_)) == pytest.approx(
+        n0 + 4 * batches * per_thread)
+    assert km.n_rounds_ == len(km.telemetry_)
