@@ -9,6 +9,17 @@ import numpy as np
 
 from repro.data import synthetic
 
+# resolved FitConfig dict of every fit the suites run; benchmarks/run.py
+# drains this into artifacts/bench/manifests.json. In-process fits are
+# recorded automatically (run.py wraps api.fit); suites that fit in a
+# SUBPROCESS (benchmarks/xl_engine.py needs forced host devices) call
+# `record_manifest` themselves with the child's resolved configs.
+MANIFESTS: List[dict] = []
+
+
+def record_manifest(suite: str, config_dict: dict) -> None:
+    MANIFESTS.append({"suite": suite, "config": config_dict})
+
 
 @functools.lru_cache(maxsize=None)
 def dataset(name: str, quick: bool = False):

@@ -26,20 +26,22 @@ def main() -> int:
                     help="paper-scale datasets / longer budgets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,table2,pruning,"
-                         "roofline,serve")
+                         "roofline,serve,xl")
+    ap.add_argument("--suite", dest="only",
+                    help="alias for --only")
     args = ap.parse_args()
     quick = not args.full
 
     # record the exact FitConfig of every fit the suites run
+    from benchmarks import common
     from repro import api
-    manifests: list[dict] = []
+    manifests = common.MANIFESTS
     current = {"suite": None}
     orig_fit = api.fit
 
     def recording_fit(X, config, **kw):
         out = orig_fit(X, config, **kw)
-        manifests.append({"suite": current["suite"],
-                          "config": out.config.to_dict()})
+        common.record_manifest(current["suite"], out.config.to_dict())
         return out
 
     api.fit = recording_fit
@@ -47,7 +49,7 @@ def main() -> int:
     from benchmarks import (fig1_mse_vs_time, fig2_rho_effect,
                             pruning_effectiveness, roofline_report,
                             serve_latency, table1_throughput,
-                            table2_final_quality)
+                            table2_final_quality, xl_engine)
     suites = {
         "table1": table1_throughput.main,
         "fig1": fig1_mse_vs_time.main,
@@ -56,6 +58,7 @@ def main() -> int:
         "pruning": pruning_effectiveness.main,
         "roofline": roofline_report.main,
         "serve": serve_latency.main,
+        "xl": xl_engine.main,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     ok = True

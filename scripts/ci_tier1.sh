@@ -31,4 +31,10 @@ if [ "$#" -eq 0 ]; then
     # already ran above; re-assert them by name so a future slow-marking
     # can't silently drop the serving path from the inner loop.
     timeout 600 python -m pytest -x -q tests/test_serve.py
+    # the XL engine e2e (slow-marked subprocess smoke: fold parity,
+    # run_loop bit-parity vs local/mesh, elastic XL<->local restore).
+    # Outer budget > the test's own 600 s subprocess timeout, so a slow
+    # smoke fails INSIDE pytest with its captured output, not as a bare
+    # exit 124 from this wrapper.
+    timeout 700 python -m pytest -x -q tests/test_distributed_xl.py
 fi

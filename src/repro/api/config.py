@@ -17,7 +17,7 @@ from typing import Any, Dict, Optional, Tuple
 
 ALGORITHMS = ("lloyd", "lloyd-elkan", "mb", "sgd", "mbf", "gb", "tb")
 BOUNDS = ("none", "hamerly2", "elkan")
-BACKENDS = ("local", "mesh")
+BACKENDS = ("local", "mesh", "xl")
 
 # algorithms driven by the nested grow-batch loop (the tb/gb family)
 NESTED_ALGOS = ("gb", "tb", "lloyd-elkan")
@@ -93,8 +93,13 @@ class FitConfig:
       converge_patience  quiet full-batch rounds before declaring
                   convergence.
       seed        numpy PRNG seed for shuffle + mb resampling.
-      backend     "local" (single process) | "mesh" (shard_map engine).
-      data_axes   mesh axes the points are row-sharded over (mesh only).
+      backend     "local" (single process) | "mesh" (shard_map engine,
+                  centroids replicated) | "xl" (shard_map engine with
+                  the centroids additionally sharded over model_axis —
+                  for k too large to replicate).
+      data_axes   mesh axes the points are row-sharded over (mesh/xl).
+      model_axis  mesh axis the centroids are sharded over (xl only);
+                  k must divide by the axis size.
       checkpoint  optional `CheckpointConfig`: save the full loop state
                   every N rounds so the fit can be killed and resumed
                   (see `NestedKMeans.fit(resume=True)`).
@@ -115,6 +120,7 @@ class FitConfig:
     seed: int = 0
     backend: str = "local"
     data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
     checkpoint: Optional[CheckpointConfig] = None
 
     def __post_init__(self):
@@ -149,16 +155,25 @@ class FitConfig:
         if self.kernel_backend not in (None, "ref", "pallas"):
             raise ValueError(f"unknown kernel_backend "
                              f"{self.kernel_backend!r}")
-        if self.backend == "mesh" and self.algorithm not in ("gb", "tb"):
+        if self.backend in ("mesh", "xl") \
+                and self.algorithm not in ("gb", "tb"):
             raise ValueError(
-                f"the mesh engine only runs the nested family (gb/tb); "
-                f"got algorithm={self.algorithm!r}")
-        if self.backend == "mesh" and self.bounds == "elkan":
+                f"the {self.backend} engine only runs the nested family "
+                f"(gb/tb); got algorithm={self.algorithm!r}")
+        if self.backend in ("mesh", "xl") and self.bounds == "elkan":
             raise ValueError(
-                "the mesh engine does not shard the per-(i,j) elkan "
-                "bound state; use bounds='hamerly2' or 'none'")
+                f"the {self.backend} engine does not shard the per-(i,j) "
+                f"elkan bound state; use bounds='hamerly2' or 'none'")
         if not isinstance(self.data_axes, tuple):
             object.__setattr__(self, "data_axes", tuple(self.data_axes))
+        if not self.model_axis or not isinstance(self.model_axis, str):
+            raise ValueError(
+                f"model_axis must be a non-empty mesh axis name, got "
+                f"{self.model_axis!r}")
+        if self.backend == "xl" and self.model_axis in self.data_axes:
+            raise ValueError(
+                f"model_axis {self.model_axis!r} cannot also be a data "
+                f"axis {self.data_axes!r}")
 
     # -- canonicalisation ---------------------------------------------------
 

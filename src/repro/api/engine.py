@@ -12,9 +12,10 @@ an `Engine` only knows how to place data and execute one compiled round.
 
 `LocalEngine` wraps the bucketed-jit rounds; `MeshEngine` wraps the
 shard_map rounds with points row-sharded over the mesh's data axes and
-replicated cluster stats. Both produce bit-identical centroids for the
-same (data placement, config) because every round function is exact and
-the host schedule is shared.
+replicated cluster stats; `XLEngine` additionally shards the centroids
+over the mesh's model axis for k too large to replicate. All produce
+bit-identical centroids for the same (data placement, config) because
+every round function is exact and the host schedule is shared.
 """
 from __future__ import annotations
 
@@ -326,8 +327,11 @@ def run_loop(run: EngineRun, config: FitConfig, *,
     else:
         final = run.eval_mse(state)
     if final is not None:
+        # b is per-shard; b * n_shards includes the structural pad rows
+        # on a non-divisible mesh, so cap at the real dataset size
         telemetry.append(Telemetry(
-            round=len(telemetry), t=t_work, b=b * run.n_shards,
+            round=len(telemetry), t=t_work,
+            b=min(b * run.n_shards, run.n_points),
             batch_mse=None, n_changed=0, n_recomputed=0, grow=False,
             r_median=None, val_mse=final))
 
@@ -470,15 +474,17 @@ class LocalEngine:
 # --------------------------------------------------------------------------
 
 class _MeshRun(EngineRun):
+    _engine_name = "mesh"
+
     def __init__(self, X, config: FitConfig, mesh, X_val, init_C):
         from jax.sharding import NamedSharding, PartitionSpec as P
-
-        from repro.core.distributed import make_sharded_round, shard_state
 
         from repro.data.pipeline import nested_shard_layout
 
         data_axes = config.data_axes
         n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+        self._config = config
+        self._mesh = mesh
         X = np.asarray(X)
         N_real = X.shape[0]
         # the placement (shuffle + structural tail pads + round-robin
@@ -502,12 +508,9 @@ class _MeshRun(EngineRun):
         state = init_state(self._Xd, config.k, bounds=config.bounds)
         state = dataclasses.replace(
             state, stats=dataclasses.replace(state.stats, C=C0))
-        self.state = shard_state(state, mesh, data_axes)
+        self.state = self._place_state(state)
 
         self._Xv = jnp.asarray(X_val) if X_val is not None else None
-        self._config = config
-        self._mesh = mesh
-        self._make_round = make_sharded_round
         self.b = max(1, min(config.b0, N_real) // n_shards)
         # every shard's real rows are prefix-contiguous in its storage
         # slice; shards whose last storage row is a structural pad cap
@@ -527,8 +530,21 @@ class _MeshRun(EngineRun):
         self.orig_index = lay.orig_index()
         self.n_points = N_real
 
+    # -- engine-layout hooks (overridden by _XLRun) -------------------------
+
+    def _place_state(self, state: KMeansState) -> KMeansState:
+        from repro.core.distributed import shard_state
+        return shard_state(state, self._mesh, self._config.data_axes)
+
+    def _stat_shardings(self):
+        """Sharding pytree of ``state.stats`` for the elastic restore."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(self._mesh, P())
+        return jax.tree.map(lambda _: rep, self.state.stats)
+
     def nested_step(self, state, b, capacity):
-        round_fn = self._make_round(
+        from repro.core.distributed import make_sharded_round
+        round_fn = make_sharded_round(
             self._mesh, self._config.data_axes, b_local=b,
             rho=self._config.rho, bounds=self._config.bounds,
             capacity=capacity, use_shalf=self._config.use_shalf,
@@ -558,7 +574,7 @@ class _MeshRun(EngineRun):
             "lb": canon(state.points.lb),
             "round": np.asarray(state.round),
         }
-        meta = {"engine": "mesh", "n_shards": self.n_shards,
+        meta = {"engine": self._engine_name, "n_shards": self.n_shards,
                 "n_points": self.n_points, "has_mb": False,
                 "has_elkan": False}
         return tree, meta
@@ -568,10 +584,12 @@ class _MeshRun(EngineRun):
         rep = NamedSharding(self._mesh, P())
         row = NamedSharding(self._mesh, P(self._config.data_axes))
 
-        # replicated leaves go through the elastic re-shard machinery
+        # small leaves go through the elastic re-shard machinery (stats
+        # are stored full/canonical; _stat_shardings re-places them in
+        # this engine's layout — replicated here, k-sharded on the XL
+        # engine)
         small = {"stats": self.state.stats, "round": self.state.round}
-        small_sh = {"stats": jax.tree.map(lambda _: rep, self.state.stats),
-                    "round": rep}
+        small_sh = {"stats": self._stat_shardings(), "round": rep}
         got = store.restore(small, step=step, shardings=small_sh)
 
         # per-point leaves come back canonical; re-pad + re-interleave
@@ -611,10 +629,89 @@ class MeshEngine:
         return _MeshRun(X, config, self.mesh, X_val, init_C)
 
 
+# --------------------------------------------------------------------------
+# XLEngine — centroids sharded over the model axis (kmeans_xl scale)
+# --------------------------------------------------------------------------
+
+class _XLRun(_MeshRun):
+    """A `_MeshRun` whose cluster stats are sharded over ``model_axis``.
+
+    Data placement, b units (per-data-shard rows), the n_valid tail mask
+    and the canonical checkpoint layout are all inherited from the mesh
+    run — checkpoints are written with FULL (k, d) stats, so an XL
+    checkpoint restores elastically onto local/mesh engines and onto any
+    model-axis size that divides k, and vice versa. Only the state
+    placement and the compiled round differ.
+    """
+    _engine_name = "xl"
+
+    def __init__(self, X, config: FitConfig, mesh, X_val, init_C):
+        if config.model_axis not in mesh.shape:
+            raise ValueError(
+                f"backend='xl' needs mesh axis "
+                f"{config.model_axis!r} (config.model_axis) to shard "
+                f"the centroids over, but the mesh only has axes "
+                f"{tuple(mesh.axis_names)}")
+        m = int(mesh.shape[config.model_axis])
+        if config.k % m:
+            raise ValueError(
+                f"backend='xl' shards the k={config.k} centroids over "
+                f"mesh axis {config.model_axis!r} of size {m}; k must "
+                f"divide evenly")
+        super().__init__(X, config, mesh, X_val, init_C)
+
+    def _place_state(self, state: KMeansState) -> KMeansState:
+        from repro.core.distributed_xl import shard_state_xl
+        return shard_state_xl(state, self._mesh, self._config.data_axes,
+                              self._config.model_axis)
+
+    def _stat_shardings(self):
+        from jax.sharding import NamedSharding
+
+        from repro.core.distributed_xl import xl_state_specs
+        specs = xl_state_specs(self._config.data_axes,
+                               self._config.model_axis)
+        return jax.tree.map(lambda sp: NamedSharding(self._mesh, sp),
+                            specs.stats)
+
+    def nested_step(self, state, b, capacity):
+        from repro.core.distributed_xl import make_xl_nested_round
+        round_fn = make_xl_nested_round(
+            self._mesh, self._config.data_axes,
+            model_axis=self._config.model_axis, b_local=b,
+            rho=self._config.rho, bounds=self._config.bounds,
+            capacity=capacity, use_shalf=self._config.use_shalf,
+            n_real=self._n_real,
+            kernel_backend=self._config.kernel_backend)
+        return round_fn(self._Xd, state)
+
+
+class XLEngine:
+    """Centroid-sharded engine: points over data axes, k over model.
+
+    The regime past `MeshEngine`: when k*d no longer replicates (the
+    ~10^5-centroid massive-data setting), each model shard scans only
+    its k-slice with the fused top-2 kernel, the per-point top-2 triples
+    are tree-folded over the model axis, and the S/v deltas are
+    psum_scatter'ed so no device ever materialises full-k statistics.
+    Drives the same `run_loop` (growth, overflow retry, patience,
+    checkpoints) as every other engine.
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def begin(self, X, config: FitConfig, *, X_val=None,
+              init_C=None) -> EngineRun:
+        return _XLRun(X, config, self.mesh, X_val, init_C)
+
+
 def make_engine(config: FitConfig, *, mesh=None) -> Engine:
-    """Engine for ``config.backend`` ("mesh" requires a mesh)."""
-    if config.backend == "mesh":
+    """Engine for ``config.backend`` ("mesh"/"xl" require a mesh)."""
+    if config.backend in ("mesh", "xl"):
         if mesh is None:
-            raise ValueError("backend='mesh' needs a jax.sharding.Mesh")
-        return MeshEngine(mesh)
+            raise ValueError(
+                f"backend={config.backend!r} needs a jax.sharding.Mesh")
+        return MeshEngine(mesh) if config.backend == "mesh" \
+            else XLEngine(mesh)
     return LocalEngine()

@@ -25,10 +25,18 @@ import jax.numpy as jnp
 
 
 def sigma_c(sse: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-    """Per-cluster stochastic-error estimate; +inf where v <= 1."""
+    """Per-cluster stochastic-error estimate; +inf where v <= 1.
+
+    The v(v-1) denominator is substituted (never clamped) where the
+    estimate is undefined: for 1 < v < 2 the true denominator is in
+    (0, 2), and clamping it up to 1.0 would silently DEFLATE sigma_C for
+    exactly the small-count clusters the paper's balancing argument
+    needs an honest noise estimate for. The `where`-inside-`where` keeps
+    the v <= 1 lanes division-safe without distorting any live lane.
+    """
     denom = v * (v - 1.0)
-    return jnp.where(v > 1.0, jnp.sqrt(sse / jnp.maximum(denom, 1.0)),
-                     jnp.inf)
+    safe = jnp.where(v > 1.0, denom, 1.0)
+    return jnp.where(v > 1.0, jnp.sqrt(sse / safe), jnp.inf)
 
 
 def growth_ratios(sse: jnp.ndarray, v: jnp.ndarray,

@@ -54,6 +54,25 @@ def shard_map_compat(fn, *, mesh, in_specs, out_specs):
 # replicated-centroid engine (paper-scale k)
 # --------------------------------------------------------------------------
 
+def per_shard_n_valid(data_axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                      n_shards: int, n_real: Optional[int]):
+    """This shard's real-row cap, derived INSIDE shard_map (or None).
+
+    Linear shard index, row-major over ``data_axes`` — matches the slice
+    order of NamedSharding(mesh, P(data_axes, None)). The up-to-
+    ``n_shards - 1`` tail rows of a non-divisible ``n_real`` land on the
+    low shards (PR 2 fix); shared by every sharded round factory so the
+    tail-row semantics cannot drift between engines.
+    """
+    if n_real is None:
+        return None
+    idx = jnp.zeros((), jnp.int32)
+    for ax, sz in zip(data_axes, sizes):
+        idx = idx * sz + jax.lax.axis_index(ax)
+    base, rem = divmod(n_real, n_shards)
+    return base + (idx < rem).astype(jnp.int32)
+
+
 @functools.lru_cache(maxsize=None)
 def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
                        b_local: int, rho: float, bounds: str = "hamerly2",
@@ -85,15 +104,7 @@ def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
         n_shards *= s
 
     def fn(Xs, st):
-        n_valid = None
-        if n_real is not None:
-            # linear shard index, row-major over data_axes — matches the
-            # slice order of NamedSharding(mesh, P(data_axes, None))
-            idx = jnp.zeros((), jnp.int32)
-            for ax, sz in zip(data_axes, sizes):
-                idx = idx * sz + jax.lax.axis_index(ax)
-            base, rem = divmod(n_real, n_shards)
-            n_valid = base + (idx < rem).astype(jnp.int32)
+        n_valid = per_shard_n_valid(data_axes, sizes, n_shards, n_real)
         return rounds.nested_round(
             Xs, st, b=b_local, rho=rho, bounds=bounds, capacity=capacity,
             use_shalf=use_shalf, data_axes=data_axes, n_valid=n_valid)
@@ -160,50 +171,81 @@ def fit_distributed(X,
 # --------------------------------------------------------------------------
 
 def _fold_top2(d1a, d2a, ia, d1b, d2b, ib):
-    """Combine two (min, 2nd-min, argmin) triples."""
+    """Combine two (min, 2nd-min, argmin) triples.
+
+    Ties on the minimum break toward the LOWER global index, which makes
+    the fold associative and commutative: tree folds, sequential folds
+    and a single-device argmin over the concatenated centroids all pick
+    the same winner, so shard count never changes an assignment.
+    """
+    take_b = (d1b < d1a) | ((d1b == d1a) & (ib < ia))
     new1 = jnp.minimum(d1a, d1b)
-    newi = jnp.where(d1b < d1a, ib, ia)
+    newi = jnp.where(take_b, ib, ia)
     new2 = jnp.minimum(jnp.maximum(d1a, d1b), jnp.minimum(d2a, d2b))
     return new1, new2, newi
 
 
 def assign_top2_sharded(x: jax.Array, C_local: jax.Array, *,
-                        model_axis: str, k_offset: jax.Array):
+                        model_axis: str, k_offset: jax.Array,
+                        backend: Optional[str] = None):
     """Top-2 nearest over model-sharded centroids (inside shard_map).
 
     Each model shard scans its (k_local, d) slice, then the per-shard
     triples are all-gathered over ``model_axis`` (3 floats + 1 int per
-    point per shard) and folded. Returns GLOBAL indices.
+    point per shard) and combined with a log-depth tree fold — the
+    per-point reduction is O(log m) fold steps instead of the m-1 of a
+    sequential left fold.
+
+    Returns ``(a, d1_sq, d2_sq)`` with GLOBAL centroid indices and
+    SQUARED distances — the exact units of `ops.assign_top2`, so the two
+    are drop-in interchangeable and callers take one sqrt at the
+    boundary. Ties on the minimum distance resolve to the lowest global
+    index, matching `jnp.argmin` on the unsharded centroid block.
     """
-    a_loc, d1_loc, d2_loc = ops.assign_top2(x, C_local)
+    a_loc, d1_loc, d2_loc = ops.assign_top2(x, C_local, backend=backend)
     a_glob = a_loc + k_offset
     d1s = jax.lax.all_gather(d1_loc, model_axis)       # (m, b)
     d2s = jax.lax.all_gather(d2_loc, model_axis)
     ias = jax.lax.all_gather(a_glob, model_axis)
-    d1, d2, ia = d1s[0], d2s[0], ias[0]
-    m = d1s.shape[0]
-    for s in range(1, m):
-        d1, d2, ia = _fold_top2(d1, d2, ia, d1s[s], d2s[s], ias[s])
-    return ia.astype(jnp.int32), d1, d2
+    while d1s.shape[0] > 1:
+        half = d1s.shape[0] // 2
+        d1, d2, ia = _fold_top2(
+            d1s[:half], d2s[:half], ias[:half],
+            d1s[half:2 * half], d2s[half:2 * half], ias[half:2 * half])
+        if d1s.shape[0] % 2:           # odd: carry the tail row over
+            d1 = jnp.concatenate([d1, d1s[2 * half:]])
+            d2 = jnp.concatenate([d2, d2s[2 * half:]])
+            ia = jnp.concatenate([ia, ias[2 * half:]])
+        d1s, d2s, ias = d1, d2, ia
+    return ias[0].astype(jnp.int32), d1s[0], d2s[0]
 
 
 def xl_round_body(x, C_local, S_local, v_local, *, k: int,
-                  data_axes: Tuple[str, ...], model_axis: str):
+                  data_axes: Tuple[str, ...], model_axis: str,
+                  rho: float = float("inf")):
     """One production round with points sharded over data axes AND
     centroids sharded over the model axis (the kmeans_xl dry-run step).
 
     Stateless-bounds variant (first / dense round): exhaustive sharded
     top-2, fresh S/v via one-hot-matmul cluster sums reduced with
     psum(data) + psum_scatter(model). Returns the updated local centroid
-    shard and telemetry.
+    shard and telemetry. All returned distances (``d``, ``d2``) are
+    EUCLIDEAN — `assign_top2_sharded` returns squared distances and this
+    boundary takes the sqrt for both, so the output tuple never mixes
+    units. ``rho`` is the growth-controller threshold (Alg. 6);
+    ``float("inf")`` keeps the gb-inf/tb-inf degenerate rule.
+
+    The loop-driven nested-prefix variant (delta S/v, bounds, n_valid
+    masking) lives in `repro.core.distributed_xl.xl_nested_round`.
     """
     k_local = C_local.shape[0]
     ax_idx = jax.lax.axis_index(model_axis)
     k_offset = ax_idx * k_local
 
-    a, d1, d2 = assign_top2_sharded(x, C_local, model_axis=model_axis,
-                                    k_offset=k_offset)
+    a, d1, d2sq = assign_top2_sharded(x, C_local, model_axis=model_axis,
+                                      k_offset=k_offset)
     d = jnp.sqrt(jnp.maximum(d1, 0.0))
+    d2 = jnp.sqrt(jnp.maximum(d2sq, 0.0))
 
     # full-k local partials. x (and the folded a) are REPLICATED over the
     # model axis, so each model shard's partial already agrees across the
@@ -227,15 +269,14 @@ def xl_round_body(x, C_local, S_local, v_local, *, k: int,
     p_all = jax.lax.all_gather(p_local, model_axis, tiled=True)
     v_all = jax.lax.all_gather(v_new, model_axis, tiled=True)
     sse_all = jax.lax.all_gather(sse_new, model_axis, tiled=True)
-    grow, r_med = controller.should_grow(sse_all, v_all, p_all,
-                                         rho=float("inf"))
+    grow, r_med = controller.should_grow(sse_all, v_all, p_all, rho=rho)
     mse = jax.lax.psum(jnp.sum(d * d), data_axes) / \
         jax.lax.psum(jnp.asarray(x.shape[0], jnp.float32), data_axes)
     return C_new, S_new, v_new, a, d, d2, grow, r_med, mse
 
 
 def dp_round_body(x, C, *, data_axes: Tuple[str, ...],
-                  use_pallas: bool = False):
+                  rho: float = float("inf"), use_pallas: bool = False):
     """Optimized production round: pure data parallelism, C replicated.
 
     For k up to ~10^4 the centroid block is VMEM-resident (k=4096 x
@@ -261,17 +302,23 @@ def dp_round_body(x, C, *, data_axes: Tuple[str, ...],
     safe_v = jnp.maximum(v, 1.0)
     C_new = jnp.where((v > 0.0)[:, None], S / safe_v[:, None], C)
     p = jnp.sqrt(jnp.sum((C_new - C) ** 2, axis=1))
-    grow, r_med = controller.should_grow(sse, v, p, rho=float("inf"))
+    grow, r_med = controller.should_grow(sse, v, p, rho=rho)
     mse = jax.lax.psum(jnp.sum(d * d), data_axes) / jax.lax.psum(
         jnp.asarray(x.shape[0], jnp.float32), data_axes)
     return C_new, S, v, a, d, grow, r_med, mse
 
 
 @functools.lru_cache(maxsize=None)
-def make_dp_round(mesh: Mesh, *, use_pallas: bool = False):
-    """jit(shard_map) data-parallel round over ALL mesh axes."""
+def make_dp_round(mesh: Mesh, *, rho: float = float("inf"),
+                  use_pallas: bool = False):
+    """jit(shard_map) data-parallel round over ALL mesh axes.
+
+    ``rho`` is a static cache key like `make_sharded_round`'s: the
+    config's threshold reaches the controller instead of a hardcoded
+    ``float("inf")``.
+    """
     axes = tuple(mesh.axis_names)
-    fn = functools.partial(dp_round_body, data_axes=axes,
+    fn = functools.partial(dp_round_body, data_axes=axes, rho=rho,
                            use_pallas=use_pallas)
     sm = shard_map_compat(
         fn, mesh=mesh,
@@ -284,17 +331,21 @@ def make_dp_round(mesh: Mesh, *, use_pallas: bool = False):
 @functools.lru_cache(maxsize=None)
 def make_xl_round(mesh: Mesh, *, k: int,
                   data_axes: Tuple[str, ...] = ("data",),
-                  model_axis: str = "model"):
+                  model_axis: str = "model",
+                  rho: float = float("inf")):
     """jit(shard_map) of the sharded-centroid production round.
 
     Kept as the centroid-sharded variant for k too large to replicate
     (k*d beyond VMEM, ~10^5+ centroids); for kmeans_xl (k=4096) the
-    data-parallel ``make_dp_round`` dominates it — see §Perf."""
+    data-parallel ``make_dp_round`` dominates it — see §Perf. ``rho``
+    is a static cache key threading the config's growth threshold to
+    the controller. The loop-driven engine over this layout is
+    `repro.api.engine.XLEngine` (see `core.distributed_xl`)."""
     row = P(data_axes)
     kshard = P(model_axis)
 
     fn = functools.partial(xl_round_body, k=k, data_axes=data_axes,
-                           model_axis=model_axis)
+                           model_axis=model_axis, rho=rho)
     sm = shard_map_compat(
         fn, mesh=mesh,
         in_specs=(P(data_axes, None), P(model_axis, None),

@@ -1,0 +1,355 @@
+"""Loop-driven centroid-sharded nested rounds (the kmeans_xl engine core).
+
+`core.distributed.make_xl_round` is a stateless dense round: every call
+re-assigns every point against fresh S/v. This module is the
+nested-prefix counterpart that `repro.api.engine.XLEngine` drives
+through the shared host loop (`run_loop`): per-shard prefix batching
+with ``n_valid`` masking, previously-seen-point delta S/v, Hamerly
+bounding, growth, overflow retry and checkpointing — the full Alg. 6/9
+schedule at centroid counts too large to replicate.
+
+Layout (extends DESIGN.md §3 with a sharded model dimension):
+  * points row-sharded over ``data_axes`` exactly like the mesh engine
+    (`data.pipeline.nested_shard_layout` placement; the union of
+    per-shard prefixes of size b is the global shuffle prefix), and
+    REPLICATED over ``model_axis``.
+  * cluster stats sharded over ``model_axis``: each model shard owns the
+    (k_local, d) slice of C/S and the (k_local,) slices of v/sse/p,
+    replicated over the data axes.
+  * assignment: each model shard scans its k-slice with the fused top-2
+    kernel; the per-shard (d1, d2, idx) triples are all-gathered over
+    ``model_axis`` and tree-folded (`assign_top2_sharded`), so ``a``
+    holds GLOBAL centroid indices and is replica-consistent over model.
+  * delta S/v: the local batch rows are split into ``m`` chunks, one per
+    model shard; each shard computes full-k partial sums over ITS row
+    chunk only (an m-fold FLOP cut versus every shard summing every
+    row), then one psum_scatter over ``model_axis`` simultaneously
+    reduces the chunks and scatters the k-slices — each k-shard receives
+    exactly its own slice — and a psum over ``data_axes`` completes the
+    global delta. sse refreshes the same way.
+  * the growth controller needs global per-cluster stats: the tiny
+    (k_local,) vectors v/sse/p are all-gathered over ``model_axis`` and
+    fed to `controller.should_grow` with the CONFIG's rho.
+
+Bit-compatibility: on a 1-device model axis every collective here
+collapses to the identity and each compute step mirrors
+`rounds.nested_round` operation for operation, so an XLEngine fit on a
+single-model-shard mesh reproduces the MeshEngine (and, at one data
+shard, the LocalEngine) bit for bit — tested in scripts/smoke_xl.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import controller, rounds
+from repro.core.distributed import (assign_top2_sharded, per_shard_n_valid,
+                                    shard_map_compat)
+from repro.core.rounds import _euclid
+from repro.core.state import (ClusterStats, KMeansState, PointState,
+                              RoundInfo, centroid_update)
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------------------------
+# sharded building blocks
+# --------------------------------------------------------------------------
+
+def _dist_to_assigned_sharded(x: jax.Array, C_local: jax.Array,
+                              a: jax.Array, k_offset: jax.Array,
+                              model_axis: str) -> jax.Array:
+    """Exact euclidean distance of each point to its assigned centroid.
+
+    The assigned centroid of a point may live on any model shard: each
+    shard computes the distance for the points whose GLOBAL assignment
+    falls in its k-slice and contributes zero for the rest, and one psum
+    over ``model_axis`` assembles the full vector. Never-assigned points
+    (``a == -1``) fall outside every slice and come back 0.0 — their
+    lanes are dead (``seen`` gates every use downstream).
+    """
+    k_local = C_local.shape[0]
+    a_loc = a - k_offset
+    own = (a_loc >= 0) & (a_loc < k_local)
+    Cg = C_local[jnp.clip(a_loc, 0, k_local - 1)]
+    d2 = jnp.sum((x.astype(jnp.float32) - Cg) ** 2, axis=1)
+    return _euclid(jax.lax.psum(jnp.where(own, d2, 0.0), model_axis))
+
+
+def _half_intercentroid_sharded(C_local: jax.Array, model_axis: str,
+                                m: int) -> jax.Array:
+    """Hamerly's s(j)/2 for every GLOBAL j, from per-shard k-slices.
+
+    Ring reduction: the (k_local, d) centroid blocks rotate around the
+    model axis; at each of the m-1 steps every shard folds the visiting
+    block's distances into its running per-centroid minimum. Peak
+    memory stays O(k_local * d) — the full (k, d) codebook is never
+    materialised on any device, which is the engine's reason to exist.
+    (min is exact, so the partitioned fold equals a dense row min bit
+    for bit.) The resulting (k_local,) vectors are all-gathered into
+    the full (k,) threshold table every shard needs for the bound test.
+    """
+    k_local = C_local.shape[0]
+    # own block first, self-distance masked by global index
+    d2_own = ref.pairwise_dist2(C_local, C_local)
+    eye = jnp.arange(k_local)
+    d2_own = d2_own.at[eye, eye].set(jnp.inf)
+    best = jnp.min(d2_own, axis=1)
+    block = C_local
+    perm = [(i, (i + 1) % m) for i in range(m)]
+    for _ in range(m - 1):
+        block = jax.lax.ppermute(block, model_axis, perm)
+        best = jnp.minimum(best,
+                           jnp.min(ref.pairwise_dist2(C_local, block),
+                                   axis=1))
+    s_half_loc = 0.5 * _euclid(best)
+    return jax.lax.all_gather(s_half_loc, model_axis, tiled=True)  # (k,)
+
+
+def _chunk_rows(arrs, *, m: int, model_axis: str):
+    """Deal the batch rows into ``m`` chunks, one per model shard.
+
+    Rows are padded up to a multiple of ``m`` (the pad weights are zero,
+    so padded rows contribute nothing) and model shard i takes chunk i.
+    This is what makes the psum_scatter reduction below also an m-fold
+    FLOP cut: every shard only cluster-sums b/m rows.
+    """
+    b = arrs[0].shape[0]
+    chunk = -(-b // m)
+    pad = m * chunk - b
+    ax = jax.lax.axis_index(model_axis)
+    out = []
+    for a in arrs:
+        if pad:
+            widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+            a = jnp.pad(a, widths)
+        out.append(jax.lax.dynamic_slice_in_dim(a, ax * chunk, chunk, 0))
+    return out
+
+
+def _delta_sv_xl(x, a_prev, a_new, k: int, *, m: int, model_axis: str,
+                 data_axes: Tuple[str, ...], kernel_backend):
+    """The nested S/v delta, reduced straight onto the k-shards.
+
+    Weights follow `rounds._delta_sv` (remove expired, add current;
+    ``a_new == -1`` rows contribute nothing). Each model shard computes
+    full-k partials over its row chunk, then psum_scatter over
+    ``model_axis`` reduces the m chunks AND scatters the k-slices in one
+    collective — each k-shard only ever materialises its own
+    (k_local, d) slice of the delta — and psum over ``data_axes``
+    completes the cross-shard sum.
+    """
+    seen = a_prev >= 0
+    changed = seen & (a_new != a_prev)
+    w_rm = jnp.where(changed, 1.0, 0.0).astype(jnp.float32)
+    w_add = jnp.where((changed | ~seen) & (a_new >= 0), 1.0, 0.0) \
+        .astype(jnp.float32)
+    ap = jnp.clip(a_prev, 0, k - 1)
+    an = jnp.clip(a_new, 0, k - 1)
+    x_c, ap_c, an_c, w_rm_c, w_add_c = _chunk_rows(
+        [x, ap, an, w_rm, w_add], m=m, model_axis=model_axis)
+    S_rm, v_rm = ops.cluster_sum(x_c, ap_c, k, weights=w_rm_c,
+                                 backend=kernel_backend)
+    S_add, v_add = ops.cluster_sum(x_c, an_c, k, weights=w_add_c,
+                                   backend=kernel_backend)
+    dS = jax.lax.psum_scatter(S_add - S_rm, model_axis,
+                              scatter_dimension=0, tiled=True)
+    dv = jax.lax.psum_scatter(v_add - v_rm, model_axis,
+                              scatter_dimension=0, tiled=True)
+    if data_axes:
+        dS, dv = jax.lax.psum((dS, dv), data_axes)
+    return dS, dv
+
+
+def _refresh_sse_xl(d_act, a_act, k: int, *, m: int, model_axis: str,
+                    data_axes: Tuple[str, ...]):
+    """sse(j) over active members for this shard's k-slice (exact)."""
+    d_c, a_c = _chunk_rows([d_act, jnp.clip(a_act, 0, k - 1)], m=m,
+                           model_axis=model_axis)
+    sse_full = jax.ops.segment_sum(d_c * d_c, a_c, num_segments=k)
+    sse = jax.lax.psum_scatter(sse_full, model_axis,
+                               scatter_dimension=0, tiled=True)
+    if data_axes:
+        sse = jax.lax.psum(sse, data_axes)
+    return sse
+
+
+# --------------------------------------------------------------------------
+# the nested XL round
+# --------------------------------------------------------------------------
+
+def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
+                    rho: float, bounds: str, m: int,
+                    data_axes: Tuple[str, ...], model_axis: str,
+                    capacity: Optional[int] = None, use_shalf: bool = True,
+                    kernel_backend: Optional[str] = None,
+                    n_valid: Optional[jax.Array] = None
+                    ) -> Tuple[KMeansState, RoundInfo]:
+    """One gb/tb round over the per-shard prefix ``X[:b]``, k sharded.
+
+    The centroid-sharded mirror of `rounds.nested_round`: ``state.stats``
+    leaves hold this model shard's k-slice while ``state.points`` hold
+    this data shard's rows (with GLOBAL assignment indices); ``b`` is the
+    per-data-shard prefix and ``n_valid`` caps it against the shard's
+    real rows exactly as in the mesh engine. Supports ``bounds`` "none"
+    (gb: exhaustive sharded top-2 each round) and "hamerly2" (tb: exact-
+    refresh upper bound + decayed second-nearest lower bound, with the
+    threshold's s(j)/2 table built from all-gathered per-shard slices,
+    and the same capacity compaction / overflow-retry contract as the
+    local round). RoundInfo is replica-consistent on every device.
+    """
+    k_local = state.stats.C.shape[0]
+    k = k_local * m
+    C_local = state.stats.C
+    ax_m = jax.lax.axis_index(model_axis)
+    k_offset = ax_m * k_local
+
+    x = X[:b]
+    a_prev = state.points.a[:b]
+    valid = None if n_valid is None else jnp.arange(b) < n_valid
+
+    def assign_fn(xs):
+        return assign_top2_sharded(xs, C_local, model_axis=model_axis,
+                                   k_offset=k_offset,
+                                   backend=kernel_backend)
+
+    # the bound/compaction schedule itself lives ONLY in rounds.py; this
+    # engine injects the four quantities that need model-axis
+    # collectives, so the local and sharded paths cannot drift apart
+    if bounds == "none":
+        a_new, d_new, lb2, n_rec, overflow, _ = rounds._assign_exhaustive(
+            x, state, a_prev, valid, assign_top2_fn=assign_fn)
+    elif bounds == "hamerly2":
+        p_max = jax.lax.pmax(jnp.max(state.stats.p), model_axis)
+        d_a = _dist_to_assigned_sharded(x, C_local, a_prev, k_offset,
+                                        model_axis)
+        s_half = (_half_intercentroid_sharded(C_local, model_axis, m)
+                  if use_shalf else None)
+        a_new, d_new, lb2, n_rec, overflow, _ = rounds._assign_hamerly2(
+            x, state, a_prev, valid, capacity=capacity,
+            use_shalf=use_shalf, kernel_backend=kernel_backend,
+            p_max=p_max, d_assigned=d_a, s_half=s_half,
+            assign_top2_fn=assign_fn)
+    else:
+        raise ValueError(f"unsupported bounds for the XL engine: "
+                         f"{bounds!r} (use 'none' or 'hamerly2')")
+
+    if valid is not None:
+        a_new = jnp.where(valid, a_new, jnp.int32(-1))
+        d_new = jnp.where(valid, d_new, 0.0)
+        lb2 = jnp.where(valid, lb2, 0.0)
+
+    dS, dv = _delta_sv_xl(x, a_prev, a_new, k, m=m, model_axis=model_axis,
+                          data_axes=data_axes,
+                          kernel_backend=kernel_backend)
+    sse = _refresh_sse_xl(d_new, a_new, k, m=m, model_axis=model_axis,
+                          data_axes=data_axes)
+    mse_num = jnp.sum(d_new * d_new)
+    mse_den = (jnp.asarray(b, jnp.float32) if valid is None
+               else jnp.sum(valid.astype(jnp.float32)))
+    n_changed = jnp.sum(((a_prev >= 0) & (a_new != a_prev))
+                        .astype(jnp.int32))
+    n_active = (jnp.asarray(b, jnp.int32) if valid is None
+                else jnp.sum(valid.astype(jnp.int32)))
+    n_rec = n_rec.astype(jnp.int32)
+    overflow = overflow.astype(jnp.int32)
+    if data_axes:
+        (mse_num, mse_den, n_changed, n_active, n_rec, overflow) = \
+            jax.lax.psum((mse_num, mse_den, n_changed, n_active, n_rec,
+                          overflow), data_axes)
+
+    stats = dataclasses.replace(state.stats, S=state.stats.S + dS,
+                                v=state.stats.v + dv, sse=sse)
+    stats = centroid_update(stats)           # per-slice: C <- S/v, p
+
+    # growth decision on the GLOBAL per-cluster stats (tiny vectors)
+    v_all = jax.lax.all_gather(stats.v, model_axis, tiled=True)
+    sse_all = jax.lax.all_gather(stats.sse, model_axis, tiled=True)
+    p_all = jax.lax.all_gather(stats.p, model_axis, tiled=True)
+    grow, r_med = controller.should_grow(sse_all, v_all, p_all, rho)
+
+    points = dataclasses.replace(
+        state.points,
+        a=state.points.a.at[:b].set(a_new),
+        d=state.points.d.at[:b].set(d_new),
+        lb=state.points.lb.at[:b].set(lb2))
+
+    info = RoundInfo(
+        batch_mse=mse_num / jnp.maximum(mse_den, 1.0),
+        n_changed=n_changed, n_recomputed=n_rec, n_active=n_active,
+        overflow=overflow.astype(jnp.bool_), grow=grow, r_median=r_med,
+        p_max=jax.lax.pmax(jnp.max(stats.p), model_axis))
+    new_state = dataclasses.replace(state, stats=stats, points=points,
+                                    elkan=None, round=state.round + 1)
+    return new_state, info
+
+
+# --------------------------------------------------------------------------
+# shard_map factory + placement helpers
+# --------------------------------------------------------------------------
+
+def xl_state_specs(data_axes: Tuple[str, ...], model_axis: str):
+    """PartitionSpec pytree of the XL engine's KMeansState layout."""
+    row = P(data_axes)
+    stats = ClusterStats(C=P(model_axis, None), S=P(model_axis, None),
+                         v=P(model_axis), sse=P(model_axis),
+                         p=P(model_axis))
+    points = PointState(a=row, d=row, lb=row)
+    return KMeansState(stats=stats, points=points, elkan=None, round=P())
+
+
+@functools.lru_cache(maxsize=None)
+def make_xl_nested_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
+                         model_axis: str = "model", b_local: int,
+                         rho: float, bounds: str = "hamerly2",
+                         capacity: Optional[int] = None,
+                         use_shalf: bool = True,
+                         n_real: Optional[int] = None,
+                         kernel_backend: Optional[str] = None):
+    """jit(shard_map(xl_nested_round)) for one (b_local, capacity) bucket.
+
+    The centroid-sharded analogue of `distributed.make_sharded_round`:
+    same static-key bucketing (the host loop compiles one executable per
+    power-of-two (b, capacity) pair), same per-shard ``n_valid``
+    derivation from ``n_real`` — plus the model-axis stat sharding.
+    """
+    state_specs = xl_state_specs(data_axes, model_axis)
+    info_specs = RoundInfo(**{f.name: P() for f in
+                              dataclasses.fields(RoundInfo)})
+    sizes = tuple(int(mesh.shape[a]) for a in data_axes)
+    n_shards = 1
+    for s in sizes:
+        n_shards *= s
+    m = int(mesh.shape[model_axis])
+
+    def fn(Xs, st):
+        n_valid = per_shard_n_valid(data_axes, sizes, n_shards, n_real)
+        return xl_nested_round(
+            Xs, st, b=b_local, rho=rho, bounds=bounds, m=m,
+            data_axes=data_axes, model_axis=model_axis, capacity=capacity,
+            use_shalf=use_shalf, kernel_backend=kernel_backend,
+            n_valid=n_valid)
+
+    shardmapped = shard_map_compat(
+        fn, mesh=mesh, in_specs=(P(data_axes, None), state_specs),
+        out_specs=(state_specs, info_specs))
+    return jax.jit(shardmapped)
+
+
+def shard_state_xl(state: KMeansState, mesh: Mesh,
+                   data_axes: Tuple[str, ...],
+                   model_axis: str) -> KMeansState:
+    """Place a host state onto the mesh with the XL engine's layout.
+
+    The placement is derived from `xl_state_specs` — the ONE statement
+    of the layout, shared with the shard_map in/out specs and the
+    elastic-restore shardings (PartitionSpec is a pytree leaf, so the
+    spec tree zips directly against the state).
+    """
+    return jax.tree.map(
+        lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec)),
+        state, xl_state_specs(data_axes, model_axis))

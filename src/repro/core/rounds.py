@@ -173,9 +173,18 @@ def mbf_round(X, idx, state, *, kernel_backend=None):
 # Nested (grow-batch) rounds: gb-rho / tb-rho
 # --------------------------------------------------------------------------
 
-def _assign_exhaustive(x, state, a_prev, valid):
-    """bounds='none': full top-2 for every active point."""
-    a_new, d1sq, d2sq = ops.assign_top2(x, state.stats.C)
+def _assign_exhaustive(x, state, a_prev, valid, *, kernel_backend=None,
+                       assign_top2_fn=None):
+    """bounds='none': full top-2 for every active point.
+
+    ``assign_top2_fn`` lets the centroid-sharded engine inject its
+    collective top-2 (`distributed_xl`); the schedule stays identical.
+    """
+    if assign_top2_fn is None:
+        a_new, d1sq, d2sq = ops.assign_top2(x, state.stats.C,
+                                            backend=kernel_backend)
+    else:
+        a_new, d1sq, d2sq = assign_top2_fn(x)
     n_rec = (jnp.asarray(x.shape[0], jnp.int32) if valid is None
              else jnp.sum(valid.astype(jnp.int32)))
     return (a_new, _euclid(d1sq), _euclid(d2sq), n_rec,
@@ -183,7 +192,9 @@ def _assign_exhaustive(x, state, a_prev, valid):
 
 
 def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
-                     use_shalf: bool, kernel_backend):
+                     use_shalf: bool, kernel_backend,
+                     p_max=None, d_assigned=None, s_half=None,
+                     assign_top2_fn=None):
     """TPU-native bounding: exact-refresh upper + decayed 2nd-nearest lower.
 
     Per round (active slice, all vectorised):
@@ -198,16 +209,28 @@ def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
     recompute the round reports overflow=True and the driver retries the
     same input state with a larger bucket — exactness is never sacrificed.
     ``capacity=None`` recomputes everything (used for b == capacity).
+
+    The optional ``p_max`` / ``d_assigned`` / ``s_half`` /
+    ``assign_top2_fn`` overrides exist for the centroid-sharded engine
+    (`core.distributed_xl`), which precomputes these four quantities
+    with model-axis collectives — the bound/compaction schedule itself
+    lives ONLY here, so the engines cannot drift apart.
     """
     C = state.stats.C
     b = x.shape[0]
     seen = a_prev >= 0
-    p_max = jnp.max(state.stats.p)
+    if p_max is None:
+        p_max = jnp.max(state.stats.p)
+    if assign_top2_fn is None:
+        def assign_top2_fn(xs):
+            return ops.assign_top2(xs, C, backend=kernel_backend)
     lb_dec = state.points.lb[:b] - p_max
-    d_a = _dist_to_assigned(x, C, a_prev)
+    d_a = (_dist_to_assigned(x, C, a_prev) if d_assigned is None
+           else d_assigned)
     thresh = lb_dec
     if use_shalf:
-        s_half = _half_intercentroid(C)
+        if s_half is None:
+            s_half = _half_intercentroid(C)
         thresh = jnp.maximum(lb_dec, s_half[jnp.clip(a_prev, 0, None)])
     settled = seen & (d_a <= thresh)
     if valid is not None:
@@ -218,7 +241,7 @@ def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
     n_need = jnp.sum(needs.astype(jnp.int32))
 
     if capacity is None or capacity >= b:
-        a_full, d1sq, d2sq = ops.assign_top2(x, C, backend=kernel_backend)
+        a_full, d1sq, d2sq = assign_top2_fn(x)
         d1, d2 = _euclid(d1sq), _euclid(d2sq)
         a_new = jnp.where(settled, a_prev, a_full)
         d_new = jnp.where(settled, d_a, d1)
@@ -229,7 +252,7 @@ def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
     order = jnp.argsort(jnp.where(needs, 0, 1), stable=True)
     idx_cap = order[:capacity]
     x_cap = x[idx_cap]
-    a_cap, d1sq, d2sq = ops.assign_top2(x_cap, C, backend=kernel_backend)
+    a_cap, d1sq, d2sq = assign_top2_fn(x_cap)
     d1, d2 = _euclid(d1sq), _euclid(d2sq)
 
     # settled points carry the decayed bound + exact distance ...
@@ -308,8 +331,8 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
     valid = None if n_valid is None else jnp.arange(b) < n_valid
 
     if bounds == "none":
-        a_new, d_new, lb2, n_rec, overflow, l_new = \
-            _assign_exhaustive(x, state, a_prev, valid)
+        a_new, d_new, lb2, n_rec, overflow, l_new = _assign_exhaustive(
+            x, state, a_prev, valid, kernel_backend=kernel_backend)
     elif bounds == "hamerly2":
         a_new, d_new, lb2, n_rec, overflow, l_new = _assign_hamerly2(
             x, state, a_prev, valid, capacity=capacity,

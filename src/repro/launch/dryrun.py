@@ -236,7 +236,7 @@ def run_kmeans_cell(name: str, *, multi_pod: bool,
             # C replicated (see distributed.make_dp_round docstring).
             n_chips_all = len(jax.devices())
             N += -N % n_chips_all
-            fn = kd.make_dp_round(mesh)
+            fn = kd.make_dp_round(mesh, rho=kcfg.rho)
             args = (jax.ShapeDtypeStruct((N, d), jnp.float32),
                     jax.ShapeDtypeStruct((k, d), jnp.float32))
             lowered = fn.lower(*args)

@@ -31,7 +31,8 @@ from repro.train import step as tstep
 def build_codebook(E: np.ndarray, k: int, seed: int, *,
                    checkpoint_dir: str | None = None,
                    save_every: int = 20,
-                   resume: bool = False) -> NestedKMeans:
+                   resume: bool = False,
+                   backend: str = "local") -> NestedKMeans:
     """Fit the embedding-table codebook through the unified api.
 
     With ``checkpoint_dir`` the fit checkpoints its full loop state
@@ -39,6 +40,16 @@ def build_codebook(E: np.ndarray, k: int, seed: int, *,
     fit bit-identically instead of restarting. ``resume`` without a
     checkpoint dir is a loud error — silently refitting from scratch is
     exactly what a resuming operator does not want.
+
+    ``backend`` selects the execution engine for the FIT: "local"
+    (default), "mesh" (points sharded over the host devices) or "xl"
+    (points AND centroids sharded — the large-k regime). The mesh is
+    built over whatever devices are visible; checkpoints restore
+    elastically across backends, so a fit checkpointed locally resumes
+    sharded and vice versa. The returned estimator is always a LOCAL
+    one — a sharded fit's outcome is adopted onto the local engine so
+    downstream streaming (`ClusterService` -> `partial_fit`, which is
+    local-only) keeps working.
     """
     if resume and not checkpoint_dir:
         raise ValueError(
@@ -47,11 +58,40 @@ def build_codebook(E: np.ndarray, k: int, seed: int, *,
     ck = (CheckpointConfig(checkpoint_dir=checkpoint_dir,
                            save_every=save_every)
           if checkpoint_dir else None)
-    km = NestedKMeans(FitConfig(k=k, algorithm="tb", rho=float("inf"),
-                                b0=min(2 * k, E.shape[0]),
-                                bounds="hamerly2", max_rounds=200,
-                                seed=seed, checkpoint=ck))
+    mesh = None
+    if backend in ("mesh", "xl"):
+        import math
+        n_dev = len(jax.devices())
+        # widest model axis both the device count and k divide by —
+        # degrading to m=1 (centroids unsharded) only when unavoidable,
+        # and loudly, since an operator asked for xl to SHARD k
+        m = math.gcd(n_dev, k) if backend == "xl" else 1
+        if backend == "xl" and m == 1 and n_dev > 1:
+            print(f"warning: backend='xl' cannot shard k={k} over "
+                  f"{n_dev} devices (gcd 1); centroids stay replicated "
+                  f"(equivalent to backend='mesh')")
+        mesh = jax.make_mesh((n_dev // m, m), ("data", "model"))
+    cfg = FitConfig(k=k, algorithm="tb", rho=float("inf"),
+                    b0=min(2 * k, E.shape[0]), bounds="hamerly2",
+                    max_rounds=200, seed=seed, checkpoint=ck,
+                    backend=backend, data_axes=("data",),
+                    model_axis="model")
+    km = NestedKMeans(cfg, mesh=mesh)
     km.fit(E, resume=resume)
+    if backend != "local":
+        # hand the sharded outcome to a local estimator: partial_fit
+        # streaming is local-only. Only the (k, d)-sized cluster stats
+        # are pulled to host — they are all adopt()/predict ever read;
+        # gathering the row-sharded per-point arrays would concentrate
+        # the whole dataset's state on one device for nothing.
+        import dataclasses
+        out = km.outcome_
+        stats = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)),
+                             out.state.stats)
+        out = dataclasses.replace(
+            out, state=dataclasses.replace(out.state, stats=stats))
+        km = NestedKMeans(dataclasses.replace(cfg, backend="local"))
+        km.adopt(out)
     return km
 
 
@@ -73,6 +113,11 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="resume a killed codebook fit from "
                          "--checkpoint-dir (error without it)")
+    ap.add_argument("--codebook-backend", default="local",
+                    choices=("local", "mesh", "xl"),
+                    help="execution engine for the codebook fit: local "
+                         "| mesh (points sharded) | xl (points + "
+                         "centroids sharded, for large K)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -91,7 +136,8 @@ def main():
         codebook = build_codebook(E, args.codebook, args.seed,
                                   checkpoint_dir=args.checkpoint_dir,
                                   save_every=args.save_every,
-                                  resume=args.resume)
+                                  resume=args.resume,
+                                  backend=args.codebook_backend)
         print(f"codebook: k={args.codebook} over {E.shape} embeddings "
               f"in {time.time() - t0:.2f}s "
               f"(rounds={codebook.n_rounds_}, "

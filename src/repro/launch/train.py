@@ -54,6 +54,11 @@ def main():
     ap.add_argument("--codebook", type=int, default=0, metavar="K",
                     help="cluster the trained embedding table into K "
                          "cells via repro.api and report VQ stats")
+    ap.add_argument("--codebook-backend", default="local",
+                    choices=("local", "mesh", "xl"),
+                    help="engine for the codebook fit: local | mesh "
+                         "(points sharded over the visible devices) | "
+                         "xl (points + centroids sharded — large K)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -127,7 +132,8 @@ def main():
         # from — build_codebook errors loudly on resume without one
         km = build_codebook(E, args.codebook, args.seed,
                             checkpoint_dir=ckpt_dir,
-                            resume=args.resume and ckpt_dir is not None)
+                            resume=args.resume and ckpt_dir is not None,
+                            backend=args.codebook_backend)
         sizes = np.bincount(km.predict(E), minlength=args.codebook)
         print(f"embedding codebook (k={args.codebook}): "
               f"VQ-MSE {-km.score(E) / E.shape[0]:.6f} "

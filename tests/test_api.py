@@ -51,10 +51,24 @@ def test_fitconfig_defaults_roundtrip():
     dict(k=8, backend="tpu-pod"),
     dict(k=8, backend="mesh", algorithm="mb"),   # mesh is nested-only
     dict(k=8, backend="mesh", bounds="elkan"),   # elkan state not sharded
+    dict(k=8, backend="xl", algorithm="lloyd"),  # xl is nested-only
+    dict(k=8, backend="xl", bounds="elkan"),
+    dict(k=8, backend="xl", model_axis=""),      # needs a real axis name
+    dict(k=8, backend="xl", data_axes=("model",),
+         model_axis="model"),                    # axes must be disjoint
 ])
 def test_fitconfig_validation_rejects(bad):
     with pytest.raises(ValueError):
         api.FitConfig(**bad)
+
+
+def test_fitconfig_xl_roundtrip():
+    cfg = api.FitConfig(k=16, algorithm="tb", backend="xl",
+                        data_axes=("pod", "data"), model_axis="mdl",
+                        rho=100.0)
+    back = api.FitConfig.from_dict(cfg.to_dict())
+    assert back == cfg
+    assert back.backend == "xl" and back.model_axis == "mdl"
 
 
 def test_fitconfig_from_dict_rejects_unknown_fields():
@@ -253,6 +267,21 @@ def test_make_engine_selects_backend():
                       api.LocalEngine)
     with pytest.raises(ValueError, match="mesh"):
         api.make_engine(api.FitConfig(k=4, backend="mesh"))
+    with pytest.raises(ValueError, match="Mesh"):
+        api.make_engine(api.FitConfig(k=4, backend="xl"))
+
+
+def test_xl_engine_begin_on_trivial_mesh():
+    """XLEngine.begin stands up the sharded layout on a 1x1 mesh (the
+    k % model-axis divisibility error needs forced multi-device hosts
+    and is covered by the smoke in tests/test_distributed_xl.py)."""
+    import jax
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    run = api.XLEngine(mesh).begin(
+        np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32),
+        api.FitConfig(k=4, backend="xl").resolve(64))
+    assert run.n_shards == 1 and run.n_points == 64
+    assert run.state.stats.C.shape == (4, 8)
 
 
 def test_run_loop_time_budget_zero(blobs):

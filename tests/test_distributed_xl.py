@@ -1,10 +1,14 @@
-"""CI gate for the centroid-sharded kmeans_xl round.
+"""CI gate for the centroid-sharded kmeans_xl path — now loop-driven.
 
-Promoted from scripts/smoke_distributed.py so the XL round — which has
-no Engine driving it yet (ROADMAP: next open Engine slot) — is
-regression-tested, not just dev-smoked. Subprocess-isolated because it
-forces 8 host devices via XLA_FLAGS, which must not leak into the rest
-of the test session.
+scripts/smoke_xl.py covers the whole XL stack: the one-shot round vs a
+Lloyd oracle, the log-depth sharded top-2 fold (parity with the single
+device kernel, same-shard top-2, cross-shard exact ties), the XLEngine
+driven end-to-end by the shared `run_loop` (bit-identical to the
+Local/Mesh engines where the layout coincides, full labeling for
+N % n_shards != 0), checkpoint/elastic restart XL<->local, and the
+config's rho reaching the sharded growth controller. Subprocess-
+isolated because it forces 8 host devices via XLA_FLAGS, which must not
+leak into the rest of the test session.
 """
 import os
 import subprocess
@@ -14,9 +18,8 @@ import pytest
 
 
 @pytest.mark.slow
-def test_xl_round_subprocess():
-    """make_xl_round + make_dp_round match an exact Lloyd oracle on a
-    (4, 2) mesh with centroids sharded over the model axis."""
+def test_xl_engine_subprocess():
+    """The full XL-engine e2e smoke on a forced 8-device host mesh."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -24,4 +27,7 @@ def test_xl_round_subprocess():
                        env=env, capture_output=True, text=True,
                        timeout=600, cwd=repo)
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "xl smoke OK" in r.stdout
+    for marker in ("fold parity", "XL(1,1) == LocalEngine",
+                   "XL(2,1) == MeshEngine", "XL->XL resume bit-identical",
+                   "rho threading + gb-on-xl OK", "xl smoke OK"):
+        assert marker in r.stdout, (marker, r.stdout)

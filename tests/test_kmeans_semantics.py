@@ -209,3 +209,29 @@ def test_sgd_is_mb_with_batch_one(blobs):
     # single-point rounds still drive centroids somewhere sensible
     mse = float(full_mse(jnp.asarray(X[:500]), jnp.asarray(res.C)))
     assert np.isfinite(mse)
+
+
+# ---------------------------------------------------------------------------
+# growth controller: sigma_C exact for small-count clusters
+# ---------------------------------------------------------------------------
+
+def test_sigma_c_exact_for_small_counts():
+    """sigma_C = sqrt(sse / (v(v-1))) must use the TRUE denominator for
+    1 < v < 2: the old maximum(denom, 1.0) clamp silently deflated the
+    noise estimate of exactly the small clusters the paper's balancing
+    argument cares about (v=1.5 -> denom 0.75, clamped to 1.0)."""
+    from repro.core import controller
+
+    sse = jnp.asarray([3.0, 3.0, 3.0, 8.0])
+    v = jnp.asarray([1.5, 1.0, 0.0, 4.0])
+    sig = np.asarray(controller.sigma_c(sse, v))
+    # v=1.5: sqrt(3 / (1.5 * 0.5)) = 2.0 exactly — NOT sqrt(3) ~ 1.732
+    assert sig[0] == pytest.approx(2.0)
+    assert np.isinf(sig[1]) and np.isinf(sig[2])     # v <= 1: undefined
+    assert sig[3] == pytest.approx(np.sqrt(8.0 / 12.0))
+    # the deflation changed growth votes: a cluster with v=1.5 and p just
+    # above the clamped estimate must now vote grow at rho=1
+    p = jnp.asarray([1.9, 1.0, 1.0, 1.0])
+    ratios = np.asarray(controller.growth_ratios(sse, v, p))
+    assert ratios[0] > 1.0                  # exact: 2.0/1.9 > 1
+    assert np.sqrt(3.0) / 1.9 < 1.0         # clamped estimate would not
