@@ -26,7 +26,7 @@ def main() -> int:
                     help="paper-scale datasets / longer budgets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,table2,pruning,"
-                         "roofline,serve,xl")
+                         "roofline,serve,xl,multihost")
     ap.add_argument("--suite", dest="only",
                     help="alias for --only")
     args = ap.parse_args()
@@ -46,7 +46,7 @@ def main() -> int:
 
     api.fit = recording_fit
 
-    from benchmarks import (fig1_mse_vs_time, fig2_rho_effect,
+    from benchmarks import (fig1_mse_vs_time, fig2_rho_effect, multihost,
                             pruning_effectiveness, roofline_report,
                             serve_latency, table1_throughput,
                             table2_final_quality, xl_engine)
@@ -59,6 +59,7 @@ def main() -> int:
         "roofline": roofline_report.main,
         "serve": serve_latency.main,
         "xl": xl_engine.main,
+        "multihost": multihost.main,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     ok = True

@@ -37,4 +37,10 @@ if [ "$#" -eq 0 ]; then
     # smoke fails INSIDE pytest with its captured output, not as a bare
     # exit 124 from this wrapper.
     timeout 700 python -m pytest -x -q tests/test_distributed_xl.py
+    # the multihost engine e2e (slow-marked subprocess smoke: 1-process
+    # mesh<->multihost bit-parity, elkan-on-sharded parity, sharded
+    # partial_fit, and a real 2-process jax.distributed CPU cluster
+    # with identical control-flow traces + kill-one-process resume).
+    # Outer budget > the test's own 900 s subprocess timeout.
+    timeout 1000 python -m pytest -x -q tests/test_multihost.py
 fi

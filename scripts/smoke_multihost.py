@@ -1,0 +1,310 @@
+"""Multihost-engine end-to-end check (run via tests/test_multihost.py).
+
+Three layers, mirroring the other smokes:
+
+Parent process (4 forced host devices, single process):
+
+  1. mesh <-> multihost bit-parity — a `backend="multihost"` fit on a
+     1-process mesh is bit-identical (centroids, labels, per-point
+     state, round-by-round schedule) to the MeshEngine on the same
+     flat data mesh, with N % n_shards != 0 so the tail-row masking is
+     live;
+  2. elkan on the sharded engines — `bounds="elkan"` now runs under
+     shard_map (the n_valid plumbing): local-vs-mesh parity on
+     N % n_shards != 0 (same assignments, matching centroids) and the
+     XLEngine's model-sharded l matrix on a (2 data, 2 model) mesh;
+  3. sharded partial_fit — the estimator streams through the
+     MeshEngine and matches the local streaming path.
+
+Child processes (2 x 2 forced host devices, a REAL jax.distributed
+cluster over a localhost coordinator):
+
+  4. replicated control flow — both processes run the shared loop and
+     must produce IDENTICAL telemetry and b_global/capacity/patience
+     traces (the loop's process-replication invariant), with every real
+     row labeled;
+  5. kill-one-process resume — a 2-process fit checkpointed mid-run
+     (process-0-only writes) restores onto a 1-process MeshEngine at
+     the same global shard count and continues with the IDENTICAL
+     round-by-round schedule to the uninterrupted 2-process run (the
+     float stats match to collective-reduction-order tolerance: a
+     cross-process gloo psum and a single-process all-reduce may sum
+     the same 4 shard partials in different orders, so cross-TOPOLOGY
+     continuation is not bitwise — same-topology resume is, as layer 1
+     and scripts/smoke_resume_mesh.py assert).
+"""
+import os
+import sys
+
+# ---------------------------------------------------------------------------
+# child: one process of the 2-process CPU cluster
+# ---------------------------------------------------------------------------
+
+N_PROC = 2
+DEV_PER_PROC = 2
+K, D, N = 8, 16, 4001            # 4001 % 4 != 0: tail rows exist
+
+
+def _dataset():
+    import numpy as np
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(K, D)) * 5
+    return (centers[rng.integers(0, K, N)]
+            + rng.normal(size=(N, D))).astype(np.float32)
+
+
+def child(proc: int, port: str, workdir: str) -> None:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={DEV_PER_PROC}"
+    import dataclasses
+    import json
+
+    import numpy as np
+
+    from repro import api
+
+    X = _dataset()
+    ck_full = api.CheckpointConfig(
+        checkpoint_dir=os.path.join(workdir, "ck_full"), save_every=4)
+    cfg = api.FitConfig(
+        k=K, algorithm="tb", b0=512, max_rounds=80, seed=1,
+        backend="multihost", capacity_floor=256,
+        coordinator_address=f"localhost:{port}",
+        num_processes=N_PROC, process_id=proc, checkpoint=ck_full)
+
+    # -- 4. full fit: every process records its control-flow trace ------
+    km = api.NestedKMeans(cfg)
+    run = km.engine.begin(X, cfg.resolve(N))
+    trace = []
+    out = api.run_loop(run, cfg.resolve(N), trace=trace)
+    assert out.converged
+    n_unlabeled = int((out.labels < 0).sum())
+    assert n_unlabeled == 0, f"{n_unlabeled} real rows never labeled"
+    assert out.telemetry[-1].b == N, out.telemetry[-1].b
+
+    telem = [r.to_dict() for r in out.telemetry]
+    for r in telem:
+        r.pop("t")                       # wall-clock is process-local
+    with open(os.path.join(workdir, f"trace_{proc}.json"), "w") as f:
+        json.dump({"trace": trace, "telemetry": telem}, f)
+    if proc == 0:
+        np.save(os.path.join(workdir, "C_full.npy"), out.C)
+        np.save(os.path.join(workdir, "labels_full.npy"), out.labels)
+
+    # -- 5a. the interrupted fit: killed at round 9 ----------------------
+    ck_kill = api.CheckpointConfig(
+        checkpoint_dir=os.path.join(workdir, "ck_kill"), save_every=4)
+    cfg_kill = dataclasses.replace(cfg, max_rounds=9, checkpoint=ck_kill)
+    api.fit(X, cfg_kill)
+
+    # -- 5b. same-topology resume ON the 2-process cluster: exercises
+    # the coordinator-read + broadcast restore (resolve_resume /
+    # _read_canonical) and must be bit-identical to the uninterrupted
+    # 2-process run. Only process 0 gets a copy of the checkpoints
+    # (the parent's own resume test still needs ck_kill mid-run) —
+    # process 1's directory stays EMPTY, proving the restore needs no
+    # shared filesystem: the coordinator reads, everyone else receives
+    # the broadcast.
+    import shutil
+    # per-process dirs on purpose: process 0's holds the checkpoints,
+    # process 1's is brand-new and empty
+    my_dir = os.path.join(workdir, f"ck_kill_child_{proc}")
+    if proc == 0:
+        shutil.copytree(os.path.join(workdir, "ck_kill"), my_dir)
+    ck_child = api.CheckpointConfig(checkpoint_dir=my_dir, save_every=4)
+    km2 = api.NestedKMeans(dataclasses.replace(cfg, checkpoint=ck_child))
+    km2.fit(X, resume=True)
+    assert km2.converged_
+    np.testing.assert_array_equal(out.C, km2.cluster_centers_)
+    resumed = [r.to_dict() for r in km2.telemetry_]
+    for r in resumed:
+        r.pop("t")
+    assert resumed == telem, "2-process resume diverged from the " \
+        "uninterrupted run"
+    if proc == 0:
+        print("2-process multihost resume: bit-identical to the "
+              "uninterrupted run", flush=True)
+    print(f"[child {proc}] fit + interrupted fit + resume done "
+          f"({len(telem)} rounds)", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# parent: single-process checks + cluster orchestration
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import json
+    import socket
+    import subprocess
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import api
+    from repro.core.state import full_mse
+    from repro.launch.mesh import make_multihost_mesh
+
+    X = _dataset()
+    mesh1d = make_multihost_mesh()           # (4,) over the forced host
+    cfg = api.FitConfig(k=K, algorithm="tb", b0=512, max_rounds=80,
+                        seed=1, capacity_floor=256)
+
+    # -- 1. mesh <-> multihost bit-parity on one process -----------------
+    out_mesh = api.fit(X, dataclasses.replace(cfg, backend="mesh"),
+                       mesh=mesh1d)
+    out_mh = api.fit(X, dataclasses.replace(cfg, backend="multihost"),
+                     mesh=mesh1d)
+    assert out_mesh.converged and out_mh.converged
+    np.testing.assert_array_equal(out_mesh.C, out_mh.C)
+    np.testing.assert_array_equal(out_mesh.labels, out_mh.labels)
+    np.testing.assert_array_equal(np.asarray(out_mesh.state.points.d),
+                                  np.asarray(out_mh.state.points.d))
+    np.testing.assert_array_equal(np.asarray(out_mesh.state.points.lb),
+                                  np.asarray(out_mh.state.points.lb))
+    assert len(out_mesh.telemetry) == len(out_mh.telemetry)
+    for ra, rb in zip(out_mesh.telemetry, out_mh.telemetry):
+        da, db = ra.to_dict(), rb.to_dict()
+        da.pop("t"), db.pop("t")
+        assert da == db, (da, db)
+    assert int((out_mh.labels < 0).sum()) == 0
+    print(f"mesh<->multihost(1 process) bit-identical over "
+          f"{len(out_mh.telemetry)} rounds (N={N} on 4 shards)")
+    mse_full = float(full_mse(jnp.asarray(X), jnp.asarray(out_mesh.C)))
+
+    # same-topology multihost resume is bitwise: interrupt at round 9,
+    # restore through the coordinator-written checkpoint, continue
+    with tempfile.TemporaryDirectory() as ckdir:
+        ck = api.CheckpointConfig(checkpoint_dir=ckdir, save_every=4)
+        cfg_mh = dataclasses.replace(cfg, backend="multihost",
+                                     checkpoint=ck)
+        api.fit(X, dataclasses.replace(cfg_mh, max_rounds=9),
+                mesh=mesh1d)
+        km_r = api.NestedKMeans(cfg_mh, mesh=mesh1d)
+        km_r.fit(X, resume=True)
+        assert km_r.converged_
+        np.testing.assert_array_equal(out_mh.C, km_r.cluster_centers_)
+        print("multihost kill-and-resume (same topology): bit-identical")
+
+    # -- 2. elkan on the sharded engines ---------------------------------
+    out_le = api.fit(X, dataclasses.replace(cfg, bounds="elkan"))
+    mesh22 = jax.make_mesh((2, 2), ("data", "model"))
+    out_me = api.fit(X, dataclasses.replace(cfg, bounds="elkan",
+                                            backend="mesh"), mesh=mesh22)
+    assert out_le.converged and out_me.converged
+    # local and mesh process the same point set each round (the union
+    # of shard prefixes IS the shuffle prefix) with exact bounds, so
+    # assignments agree; stats differ only by float summation order.
+    np.testing.assert_array_equal(out_le.labels, out_me.labels)
+    np.testing.assert_allclose(out_le.C, out_me.C, atol=1e-4)
+    assert [r.b for r in out_le.telemetry] == \
+        [r.b for r in out_me.telemetry]
+    print(f"elkan local<->mesh parity: labels identical, "
+          f"|dC| <= 1e-4 over {len(out_me.telemetry)} rounds")
+
+    out_xe = api.fit(X, dataclasses.replace(
+        cfg, bounds="elkan", backend="xl", model_axis="model"),
+        mesh=mesh22)
+    assert out_xe.converged
+    np.testing.assert_array_equal(out_le.labels, out_xe.labels)
+    np.testing.assert_allclose(out_le.C, out_xe.C, atol=1e-4)
+    print("elkan on XL (2 data x 2 model shards): labels identical "
+          "to local")
+
+    # -- 3. sharded partial_fit ------------------------------------------
+    # same seed -> same shuffle prefix -> same C0 on both engines; the
+    # streamed batches are then identical point sets, so the running
+    # stats agree up to float summation order
+    km_l = api.NestedKMeans(api.FitConfig(k=K, b0=512, seed=3))
+    km_m = api.NestedKMeans(api.FitConfig(k=K, b0=512, seed=3,
+                                          backend="mesh"), mesh=mesh1d)
+    km_l.fit(X[:2000])
+    km_m.fit(X[:2000])
+    for i in range(3):
+        batch = X[2000 + i * 667:2000 + (i + 1) * 667]  # 667 % 4 != 0
+        km_l.partial_fit(batch)
+        km_m.partial_fit(batch)
+    assert km_m.counts_.sum() == km_l.counts_.sum()
+    assert km_m.telemetry_[-1].b == 667      # pads masked, not counted
+    np.testing.assert_allclose(km_l.cluster_centers_,
+                               km_m.cluster_centers_, atol=1e-3)
+    print("sharded partial_fit: 3 non-divisible batches through the "
+          "MeshEngine match the local stream")
+
+    # -- 4 + 5. the real 2-process cluster -------------------------------
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        port = str(s.getsockname()[1])
+    with tempfile.TemporaryDirectory() as workdir:
+        env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        procs = [subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--child", str(i), port, workdir],
+            env=env, cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+            for i in range(N_PROC)]
+        for p in procs:
+            assert p.wait(timeout=600) == 0, "child process failed"
+
+        traces = []
+        for i in range(N_PROC):
+            with open(os.path.join(workdir, f"trace_{i}.json")) as f:
+                traces.append(json.load(f))
+        # the replication invariant: identical round-by-round control
+        # flow — b_global / capacity / quiet_rounds — AND identical
+        # telemetry (batch_mse etc. are replicated device scalars, so
+        # even the floats must agree bit for bit)
+        assert traces[0]["trace"] == traces[1]["trace"]
+        assert traces[0]["telemetry"] == traces[1]["telemetry"]
+        n_rounds = len(traces[0]["telemetry"])
+        print(f"2-process cluster: both processes ran the identical "
+              f"b_global/capacity/patience trace over {n_rounds} rounds")
+
+        C2 = np.load(os.path.join(workdir, "C_full.npy"))
+        labels2 = np.load(os.path.join(workdir, "labels_full.npy"))
+        assert int((labels2 < 0).sum()) == 0
+        mse2 = float(full_mse(jnp.asarray(X), jnp.asarray(C2)))
+        assert abs(mse_full - mse2) / mse_full < 0.05, (mse_full, mse2)
+        print(f"2-process fit: all {N} rows labeled, mse {mse2:.5f} "
+              f"(1-process {mse_full:.5f})")
+
+        # -- 5b. the kill-one-process resume: 2-process checkpoint ->
+        # 1-process MeshEngine at the SAME global shard count (4), so
+        # the continuation must be bit-identical to the uninterrupted
+        # 2-process run
+        ck = api.CheckpointConfig(
+            checkpoint_dir=os.path.join(workdir, "ck_kill"), save_every=4)
+        km = api.NestedKMeans(dataclasses.replace(
+            cfg, backend="mesh", checkpoint=ck), mesh=mesh1d)
+        km.fit(X, resume=True)
+        assert km.converged_
+        # identical schedule, round for round; floats to collective-
+        # reduction-order tolerance (see module docstring)
+        resumed = [r.to_dict() for r in km.telemetry_]
+        want = traces[0]["telemetry"]
+        assert len(resumed) == len(want)
+        for ra, wa in zip(resumed, want):
+            for key in ("round", "b", "n_changed", "n_recomputed",
+                        "grow"):
+                assert ra[key] == wa[key], (ra, wa)
+            if wa["batch_mse"] is not None:
+                assert abs(ra["batch_mse"] - wa["batch_mse"]) \
+                    <= 1e-4 * abs(wa["batch_mse"]), (ra, wa)
+        np.testing.assert_allclose(C2, km.cluster_centers_, atol=1e-5)
+        print(f"kill-one-process resume: 2-process checkpoint continued "
+              f"on 1 process with the identical {len(resumed)}-round "
+              f"schedule (floats within reduction-order tolerance)")
+
+    print("multihost smoke OK")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        i = sys.argv.index("--child")
+        child(int(sys.argv[i + 1]), sys.argv[i + 2], sys.argv[i + 3])
+    else:
+        main()

@@ -1,7 +1,7 @@
 """XL-engine end-to-end check (run via tests/test_distributed_xl.py).
 
 Promoted from the one-shot round smoke: the centroid-sharded path is
-now loop-driven by `repro.api.engine.XLEngine`, and this script gates
+now loop-driven by `repro.api.engines.xl.XLEngine`, and this script gates
 the whole stack with 8 forced host devices:
 
   1. round oracle — `make_xl_round` + `make_dp_round` match one exact

@@ -25,10 +25,10 @@ import numpy as np
 
 from repro.api.config import (ALGORITHMS, BACKENDS, BOUNDS,
                               CheckpointConfig, FitConfig)
-from repro.api.engine import (Engine, EngineRun, FitOutcome, LocalEngine,
-                              MeshEngine, XLEngine, cap_bucket, make_engine,
-                              next_pow2, run_loop)
+from repro.api.engines import (Engine, EngineRun, LocalEngine, MeshEngine,
+                               MultiHostEngine, XLEngine, make_engine)
 from repro.api.estimator import NestedKMeans, NotFittedError
+from repro.api.loop import FitOutcome, cap_bucket, next_pow2, run_loop
 from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
 
 
@@ -44,8 +44,8 @@ def fit(X, config: FitConfig, *, X_val=None, mesh=None,
 __all__ = [
     "FitConfig", "CheckpointConfig", "NestedKMeans", "NotFittedError",
     "fit",
-    "Engine", "EngineRun", "LocalEngine", "MeshEngine", "XLEngine",
-    "make_engine",
+    "Engine", "EngineRun", "LocalEngine", "MeshEngine", "MultiHostEngine",
+    "XLEngine", "make_engine",
     "run_loop", "FitOutcome", "Telemetry", "RoundCallback",
     "final_val_mse", "cap_bucket", "next_pow2",
     "ALGORITHMS", "BOUNDS", "BACKENDS",

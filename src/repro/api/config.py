@@ -17,10 +17,13 @@ from typing import Any, Dict, Optional, Tuple
 
 ALGORITHMS = ("lloyd", "lloyd-elkan", "mb", "sgd", "mbf", "gb", "tb")
 BOUNDS = ("none", "hamerly2", "elkan")
-BACKENDS = ("local", "mesh", "xl")
+BACKENDS = ("local", "mesh", "xl", "multihost")
 
 # algorithms driven by the nested grow-batch loop (the tb/gb family)
 NESTED_ALGOS = ("gb", "tb", "lloyd-elkan")
+
+# backends whose rounds run under shard_map (points row-sharded)
+SHARDED_BACKENDS = ("mesh", "xl", "multihost")
 
 
 def _enc_float(x: float) -> Any:
@@ -35,7 +38,7 @@ def _dec_float(x: Any) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class CheckpointConfig:
-    """In-loop checkpointing policy for `repro.api.engine.run_loop`.
+    """In-loop checkpointing policy for `repro.api.loop.run_loop`.
 
     Attributes:
       checkpoint_dir  directory for the `CheckpointStore` (created on
@@ -96,13 +99,22 @@ class FitConfig:
       backend     "local" (single process) | "mesh" (shard_map engine,
                   centroids replicated) | "xl" (shard_map engine with
                   the centroids additionally sharded over model_axis —
-                  for k too large to replicate).
-      data_axes   mesh axes the points are row-sharded over (mesh/xl).
+                  for k too large to replicate) | "multihost" (the mesh
+                  engine across jax.distributed processes; every
+                  process runs the same loop over its own rows).
+      data_axes   mesh axes the points are row-sharded over
+                  (mesh/xl/multihost).
       model_axis  mesh axis the centroids are sharded over (xl only);
                   k must divide by the axis size.
       checkpoint  optional `CheckpointConfig`: save the full loop state
                   every N rounds so the fit can be killed and resumed
-                  (see `NestedKMeans.fit(resume=True)`).
+                  (see `NestedKMeans.fit(resume=True)`). On multihost
+                  only process 0 writes; any process count can restore.
+      coordinator_address / num_processes / process_id
+                  jax.distributed initialisation for backend=
+                  "multihost" (set all three, with a per-process
+                  process_id, or none — None means the caller already
+                  initialised jax.distributed, or runs one process).
     """
     k: int
     algorithm: str = "tb"
@@ -122,6 +134,9 @@ class FitConfig:
     data_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
     checkpoint: Optional[CheckpointConfig] = None
+    coordinator_address: Optional[str] = None
+    num_processes: Optional[int] = None
+    process_id: Optional[int] = None
 
     def __post_init__(self):
         if isinstance(self.checkpoint, dict):
@@ -155,15 +170,31 @@ class FitConfig:
         if self.kernel_backend not in (None, "ref", "pallas"):
             raise ValueError(f"unknown kernel_backend "
                              f"{self.kernel_backend!r}")
-        if self.backend in ("mesh", "xl") \
-                and self.algorithm not in ("gb", "tb"):
+        if self.backend in SHARDED_BACKENDS \
+                and self.algorithm not in NESTED_ALGOS:
             raise ValueError(
                 f"the {self.backend} engine only runs the nested family "
-                f"(gb/tb); got algorithm={self.algorithm!r}")
-        if self.backend in ("mesh", "xl") and self.bounds == "elkan":
+                f"(gb/tb/lloyd-elkan); got algorithm={self.algorithm!r}")
+        coord = (self.coordinator_address, self.num_processes,
+                 self.process_id)
+        if any(c is not None for c in coord) \
+                and any(c is None for c in coord):
             raise ValueError(
-                f"the {self.backend} engine does not shard the per-(i,j) "
-                f"elkan bound state; use bounds='hamerly2' or 'none'")
+                "set coordinator_address, num_processes and process_id "
+                "together (or none of them)")
+        if self.coordinator_address is not None \
+                and self.backend != "multihost":
+            raise ValueError(
+                f"coordinator fields only apply to backend='multihost', "
+                f"got backend={self.backend!r}")
+        if self.num_processes is not None and self.num_processes < 1:
+            raise ValueError(f"num_processes must be >= 1, got "
+                             f"{self.num_processes}")
+        if self.process_id is not None and not (
+                0 <= self.process_id < (self.num_processes or 1)):
+            raise ValueError(
+                f"process_id must be in [0, num_processes), got "
+                f"{self.process_id} of {self.num_processes}")
         if not isinstance(self.data_axes, tuple):
             object.__setattr__(self, "data_axes", tuple(self.data_axes))
         if not self.model_axis or not isinstance(self.model_axis, str):

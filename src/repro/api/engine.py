@@ -1,717 +1,32 @@
-"""Execution engines + the ONE host loop shared by all of them.
+"""Back-compat shim — the engine/loop stack now lives in layered modules.
 
-Before this package existed the growth schedule, power-of-two capacity
-bucketing, overflow retry, convergence patience and wall-clock telemetry
-were copy-pasted between `core/driver.py` (single device) and
-`core/distributed.py` (shard_map). They now live once, in `run_loop`;
-an `Engine` only knows how to place data and execute one compiled round.
+The 700-line module that mixed the host control loop with every engine
+implementation was split for the multi-process refactor:
 
-  Engine.begin(X, config, ...)  -> EngineRun   (data placement + state)
-  EngineRun.nested_step/lloyd_step/mb_step     (one compiled round)
-  run_loop(run, config, ...)    -> FitOutcome  (the host schedule)
+  repro.api.loop              run_loop + FitOutcome (+ the process-
+                              replicated control-flow invariant doc)
+  repro.api.engines.base      EngineRun / Engine contract
+  repro.api.engines.local     LocalEngine (bucketed jit)
+  repro.api.engines.mesh      MeshEngine (shard_map)
+  repro.api.engines.xl        XLEngine (centroid-sharded)
+  repro.api.engines.multihost MultiHostEngine (jax.distributed)
 
-`LocalEngine` wraps the bucketed-jit rounds; `MeshEngine` wraps the
-shard_map rounds with points row-sharded over the mesh's data axes and
-replicated cluster stats; `XLEngine` additionally shards the centroids
-over the mesh's model axis for k too large to replicate. All produce
-bit-identical centroids for the same (data placement, config) because
-every round function is exact and the host schedule is shared.
+Everything importable from here before the split still is; new code
+should import from `repro.api` (public) or the specific module.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from pathlib import Path
-from typing import Any, Dict, List, Optional, Protocol, Tuple, Union, \
-    runtime_checkable
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.api.config import FitConfig
-from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
-from repro.checkpoint.store import CheckpointStore
-from repro.core import rounds
-from repro.core.state import (ElkanBounds, KMeansState, PointState,
-                              RoundInfo, full_mse, init_state)
-
-
-# --------------------------------------------------------------------------
-# result record
-# --------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class FitOutcome:
-    """What a fit produces: centroids + full state + structured telemetry.
-
-    ``labels`` is in the CALLER's row order (the engines shuffle and, on
-    a mesh, interleave/pad internally; the inverse mapping is applied
-    here). ``-1`` marks rows the nested batch never reached.
-    """
-    C: np.ndarray
-    state: KMeansState
-    labels: np.ndarray
-    telemetry: List[Telemetry]
-    converged: bool
-    algorithm: str
-    config: FitConfig
-
-    @property
-    def final_mse(self) -> float:
-        return final_val_mse(self.telemetry)
-
-
-# --------------------------------------------------------------------------
-# capacity policy (shared)
-# --------------------------------------------------------------------------
-
-def next_pow2(x: int) -> int:
-    return 1 << max(0, int(x - 1).bit_length())
-
-
-def cap_bucket(need: int, b: int, floor: int) -> Optional[int]:
-    """Power-of-two capacity with 2x slack; None == recompute everything."""
-    cap = max(floor, next_pow2(2 * max(need, 1)))
-    return None if cap >= b else cap
-
-
-# --------------------------------------------------------------------------
-# the Engine protocol
-# --------------------------------------------------------------------------
-
-class EngineRun:
-    """One fit in flight: placed data + initial state + round executors.
-
-    Subclasses set:
-      state            initial KMeansState (already placed/sharded)
-      b                initial batch size in ENGINE UNITS (global rows
-                       for LocalEngine, per-shard rows for MeshEngine)
-      b_max            largest batch in engine units
-      n_shards         data shards (1 for local)
-      n_active_target  info.n_active value meaning "full data active"
-      orig_index       (n_storage,) int: original caller row held at
-                       each internal storage row (-1 = structural pad)
-      n_points         caller's dataset size (pads excluded)
-    """
-    state: KMeansState
-    b: int
-    b_max: int
-    n_shards: int = 1
-    n_active_target: int = 0
-    orig_index: np.ndarray = None
-    n_points: int = 0
-
-    # -- round executors (pure: state in -> (state, info)) ------------------
-
-    def nested_step(self, state: KMeansState, b: int,
-                    capacity: Optional[int]
-                    ) -> Tuple[KMeansState, RoundInfo]:
-        raise NotImplementedError(
-            f"{type(self).__name__} does not run the nested family")
-
-    def lloyd_step(self, state: KMeansState
-                   ) -> Tuple[KMeansState, RoundInfo]:
-        raise NotImplementedError(
-            f"{type(self).__name__} does not run lloyd")
-
-    def mb_step(self, state: KMeansState, fixed: bool
-                ) -> Tuple[KMeansState, RoundInfo]:
-        raise NotImplementedError(
-            f"{type(self).__name__} does not run mb/mbf")
-
-    def eval_mse(self, state: KMeansState) -> Optional[float]:
-        """Validation MSE of the current centroids (None: no val set)."""
-        return None
-
-    # -- checkpointing (canonical = global-shuffle row order) ---------------
-
-    def capture(self, state: KMeansState) -> Tuple[Dict[str, Any],
-                                                   Dict[str, Any]]:
-        """(host pytree, JSON-safe engine meta) for a checkpoint.
-
-        Per-point arrays are returned in CANONICAL order — the position
-        of each real row in the seed-determined global shuffle, pads
-        dropped. The canonical layout depends only on (seed, N_real), so
-        a checkpoint written by any engine at any shard count restores
-        onto any other (elastic restart).
-        """
-        raise NotImplementedError
-
-    def restore(self, store: "CheckpointStore", step: int,
-                meta: Dict[str, Any]) -> KMeansState:
-        """Rebuild an engine-layout state from a canonical checkpoint."""
-        raise NotImplementedError
-
-
-@runtime_checkable
-class Engine(Protocol):
-    """An execution backend: owns data placement + compiled rounds."""
-
-    def begin(self, X, config: FitConfig, *,
-              X_val=None, init_C: Optional[np.ndarray] = None) -> EngineRun:
-        """Shuffle/pad/place ``X`` and build the initial state."""
-        ...
-
-
-# --------------------------------------------------------------------------
-# THE shared host loop
-# --------------------------------------------------------------------------
-
-def run_loop(run: EngineRun, config: FitConfig, *,
-             on_round: Optional[RoundCallback] = None,
-             resume_from: Optional[Union[str, Path, CheckpointStore]] = None
-             ) -> FitOutcome:
-    """Growth schedule + capacity bucketing + overflow retry + patience.
-
-    ``config`` must already be `resolve()`d (no alias algorithms). The
-    loop is backend-agnostic: every quantity it branches on comes from
-    the (psum-reduced, hence shard-replicated) RoundInfo, so the same
-    schedule drives one device or a pod mesh.
-
-    When ``config.checkpoint`` is set, the FULL loop state — engine
-    state, batch size, capacity bucket, patience counter, work clock and
-    telemetry — is saved atomically every ``save_every`` rounds (plus
-    once at loop exit) alongside the ``config.to_dict()`` manifest.
-    ``resume_from`` (a directory or `CheckpointStore`) restores the
-    latest such checkpoint through the engine's canonical layout, so a
-    killed fit continues bit-identically — and a fit checkpointed on
-    one shard count resumes on another (elastic restart).
-    """
-    algorithm = config.algorithm
-    bounds = config.bounds
-    state = run.state
-    b = run.b
-    capacity: Optional[int] = None
-    telemetry: List[Telemetry] = []
-    t_work = 0.0
-    quiet_rounds = 0
-    converged = False
-    start_round = 0
-
-    ckpt = config.checkpoint
-    store = (CheckpointStore(ckpt.checkpoint_dir, keep=ckpt.keep)
-             if ckpt is not None else None)
-
-    if store is not None and resume_from is None \
-            and store.latest_step() is not None:
-        # a FRESH checkpointed fit supersedes whatever run lives in the
-        # directory: left in place, the old (higher-numbered) steps
-        # would garbage-collect this run's early saves on arrival and a
-        # later resume would silently restore the stale fit
-        store.clear()
-
-    if resume_from is not None:
-        rstore = (resume_from if isinstance(resume_from, CheckpointStore)
-                  else CheckpointStore(resume_from,
-                                       keep=ckpt.keep if ckpt else 3))
-        step = rstore.latest_step()
-        if step is None:
-            raise FileNotFoundError(
-                f"resume_from={resume_from!r} holds no checkpoints")
-        extra = rstore.read_extra(step)
-        if not extra or "loop" not in extra:
-            raise ValueError(
-                f"checkpoint step {step} has no loop metadata; it was "
-                f"not written by run_loop")
-        emeta, loop = extra["engine"], extra["loop"]
-        state = run.restore(rstore, step, emeta)
-        telemetry = [Telemetry.from_dict(r) for r in extra["telemetry"]]
-        t_work = float(loop["t_work"])
-        quiet_rounds = int(loop["quiet_rounds"])
-        converged = bool(loop.get("converged", False))
-        start_round = int(loop["rounds_done"])
-        # b is stored in GLOBAL rows; ceil-divide onto this engine's
-        # shard count so every previously-seen point stays inside the
-        # prefix when the shard count changed across the restore.
-        b = max(1, min(-(-int(loop["b_global"]) // run.n_shards),
-                       run.b_max))
-        cap = loop.get("capacity")
-        capacity = (int(cap) if cap is not None
-                    and int(emeta.get("n_shards", 0)) == run.n_shards
-                    else None)
-
-    def record(info: RoundInfo) -> None:
-        rec = Telemetry(
-            round=len(telemetry), t=t_work, b=int(info.n_active),
-            batch_mse=float(info.batch_mse),
-            n_changed=int(info.n_changed),
-            n_recomputed=int(info.n_recomputed),
-            grow=bool(info.grow), r_median=float(info.r_median),
-            val_mse=(run.eval_mse(state)
-                     if len(telemetry) % config.eval_every == 0 else None))
-        telemetry.append(rec)
-        if on_round:
-            on_round(rec)
-
-    def save_checkpoint() -> None:
-        tree, emeta = run.capture(state)
-        extra = {
-            "config": config.to_dict(),
-            "engine": emeta,
-            "loop": {"rounds_done": len(telemetry),
-                     "b_global": b * run.n_shards, "capacity": capacity,
-                     "quiet_rounds": quiet_rounds, "t_work": t_work,
-                     "converged": converged},
-            "telemetry": [r.to_dict() for r in telemetry],
-        }
-        store.save(len(telemetry), tree, extra=extra,
-                   background=ckpt.background)
-
-    for _ in range(start_round, config.max_rounds):
-        if converged:        # resumed an already-finished fit
-            break
-        if t_work >= config.time_budget_s:
-            break
-        t0 = time.perf_counter()
-
-        if algorithm == "lloyd":
-            new_state, info = run.lloyd_step(state)
-        elif algorithm in ("mb", "mbf"):
-            new_state, info = run.mb_step(state, fixed=(algorithm == "mbf"))
-        else:  # tb family (incl. gb via bounds="none")
-            while True:
-                new_state, info = run.nested_step(state, b, capacity)
-                if not bool(info.overflow):
-                    break
-                # overflow retry: same input state, doubled bucket —
-                # exactness is never traded for speed.
-                capacity = (None if capacity is None or 2 * capacity >= b
-                            else 2 * capacity)
-
-        jax.block_until_ready(new_state.stats.C)
-        t_work += time.perf_counter() - t0
-        state = new_state
-        record(info)
-
-        if algorithm == "tb":
-            if bounds == "hamerly2":
-                need = -(-int(info.n_recomputed) // run.n_shards)
-                if bool(info.grow) and b < run.b_max:
-                    # a doubling adds b new points that always need a
-                    # full pass — start the grown bucket dense
-                    capacity = None
-                else:
-                    capacity = cap_bucket(need, b, config.capacity_floor)
-            if bool(info.grow):
-                b = min(2 * b, run.b_max)
-            # p_max rides along in the psum-consistent RoundInfo — no
-            # extra device->host sync outside the timed region
-            if (int(info.n_active) >= run.n_active_target
-                    and int(info.n_changed) == 0
-                    and float(info.p_max) == 0.0):
-                quiet_rounds += 1
-                if quiet_rounds >= config.converge_patience:
-                    converged = True
-                    break
-            else:
-                quiet_rounds = 0
-        elif algorithm == "lloyd":
-            if int(info.n_changed) == 0:
-                converged = True
-                break
-
-        if store is not None and len(telemetry) % ckpt.save_every == 0:
-            save_checkpoint()
-
-    if store is not None:
-        # one final save so a resumed-after-finish fit is a no-op loop
-        save_checkpoint()
-        store.wait()
-
-    # final validation point (outside the timed region, like every eval),
-    # unless the last in-loop round already evaluated validation — a
-    # second eval at the same t would double-count it in the telemetry
-    if telemetry and telemetry[-1].val_mse is not None:
-        final = None
-    else:
-        final = run.eval_mse(state)
-    if final is not None:
-        # b is per-shard; b * n_shards includes the structural pad rows
-        # on a non-divisible mesh, so cap at the real dataset size
-        telemetry.append(Telemetry(
-            round=len(telemetry), t=t_work,
-            b=min(b * run.n_shards, run.n_points),
-            batch_mse=None, n_changed=0, n_recomputed=0, grow=False,
-            r_median=None, val_mse=final))
-
-    # un-shuffle the final assignments back to the caller's row order
-    a = np.asarray(state.points.a)
-    labels = np.full(run.n_points, -1, np.int32)
-    valid = run.orig_index >= 0
-    labels[run.orig_index[valid]] = a[valid]
-
-    return FitOutcome(C=np.asarray(state.stats.C), state=state,
-                      labels=labels, telemetry=telemetry,
-                      converged=converged, algorithm=algorithm,
-                      config=config)
-
-
-# --------------------------------------------------------------------------
-# LocalEngine — single-process bucketed jit
-# --------------------------------------------------------------------------
-
-# shared with estimator.partial_fit so streaming batches of a repeated
-# shape hit the same jit cache as fit()
-nested_jit = jax.jit(
-    rounds.nested_round,
-    static_argnames=("b", "rho", "bounds", "capacity", "use_shalf",
-                     "kernel_backend", "data_axes"))
-_mb_jit = jax.jit(rounds.mb_round,
-                  static_argnames=("fixed", "kernel_backend"))
-_lloyd_jit = jax.jit(rounds.lloyd_round, static_argnames=("kernel_backend",))
-
-
-class _LocalRun(EngineRun):
-    def __init__(self, X, config: FitConfig, X_val, init_C):
-        rng = np.random.default_rng(config.seed)
-        X = np.asarray(X)
-        N = X.shape[0]
-        perm = rng.permutation(N) if config.shuffle else np.arange(N)
-        self._Xd = jnp.asarray(X[perm])
-        self._Xv = jnp.asarray(X_val) if X_val is not None else None
-        self._config = config
-        self._rng = rng
-
-        state = init_state(self._Xd, config.k, bounds=config.bounds)
-        if init_C is not None:       # warm start (checkpoint restart)
-            state = dataclasses.replace(state, stats=dataclasses.replace(
-                state.stats, C=jnp.asarray(init_C, jnp.float32)))
-        self.state = state
-        self.b = min(config.b0, N)
-        self.b_max = N
-        self.n_shards = 1
-        self.n_active_target = N
-        self.orig_index = perm        # storage row i holds X[perm[i]]
-        self.n_points = N
-        # mb/mbf resampling stream (paper footnote 1: cycle a reshuffle)
-        self._mb_pos = 0
-        self._mb_perm = rng.permutation(N)
-
-    def nested_step(self, state, b, capacity):
-        return nested_jit(self._Xd, state, b=b, rho=self._config.rho,
-                          bounds=self._config.bounds, capacity=capacity,
-                          use_shalf=self._config.use_shalf,
-                          kernel_backend=self._config.kernel_backend)
-
-    def lloyd_step(self, state):
-        return _lloyd_jit(self._Xd, state,
-                          kernel_backend=self._config.kernel_backend)
-
-    def mb_step(self, state, fixed):
-        N, b = self.b_max, self.b
-        if self._mb_pos + b > N:
-            self._mb_perm = self._rng.permutation(N)
-            self._mb_pos = 0
-        idx = jnp.asarray(self._mb_perm[self._mb_pos:self._mb_pos + b])
-        self._mb_pos += b
-        return _mb_jit(self._Xd, idx, state, fixed=fixed,
-                       kernel_backend=self._config.kernel_backend)
-
-    def eval_mse(self, state):
-        if self._Xv is None:
-            return None
-        return float(full_mse(self._Xv, state.stats.C))
-
-    # -- checkpointing ------------------------------------------------------
-    # storage row i holds shuffle position i, so storage order IS the
-    # canonical order for the local engine.
-
-    def capture(self, state):
-        tree = {
-            "stats": jax.tree.map(np.asarray, state.stats),
-            "a": np.asarray(state.points.a),
-            "d": np.asarray(state.points.d),
-            "lb": np.asarray(state.points.lb),
-            "round": np.asarray(state.round),
-            "mb_perm": np.asarray(self._mb_perm),
-        }
-        if state.elkan is not None:
-            tree["elkan_l"] = np.asarray(state.elkan.l)
-        meta = {
-            "engine": "local", "n_shards": 1, "n_points": self.n_points,
-            "has_mb": True, "has_elkan": state.elkan is not None,
-            "mb_pos": self._mb_pos,
-            "rng_state": self._rng.bit_generator.state,
-        }
-        return tree, meta
-
-    def restore(self, store, step, meta):
-        proto = {"stats": self.state.stats,
-                 "a": self.state.points.a, "d": self.state.points.d,
-                 "lb": self.state.points.lb, "round": self.state.round}
-        if meta.get("has_elkan"):
-            if self.state.elkan is None:
-                raise ValueError(
-                    "checkpoint carries elkan bounds but this config "
-                    "does not use bounds='elkan'")
-            proto["elkan_l"] = self.state.elkan.l
-        if meta.get("has_mb"):
-            proto["mb_perm"] = jnp.asarray(self._mb_perm)
-        got = store.restore(proto, step=step)
-        if meta.get("has_mb"):
-            self._mb_perm = np.asarray(got["mb_perm"])
-            self._mb_pos = int(meta["mb_pos"])
-        if meta.get("rng_state") is not None:
-            self._rng.bit_generator.state = meta["rng_state"]
-        points = PointState(a=got["a"], d=got["d"], lb=got["lb"])
-        elkan = (ElkanBounds(l=got["elkan_l"]) if meta.get("has_elkan")
-                 else None)
-        return KMeansState(stats=got["stats"], points=points,
-                           elkan=elkan, round=got["round"])
-
-
-class LocalEngine:
-    """Single-process engine over the bucketed-jit round functions."""
-
-    def begin(self, X, config: FitConfig, *, X_val=None,
-              init_C=None) -> EngineRun:
-        return _LocalRun(X, config, X_val, init_C)
-
-
-# --------------------------------------------------------------------------
-# MeshEngine — shard_map over the device mesh
-# --------------------------------------------------------------------------
-
-class _MeshRun(EngineRun):
-    _engine_name = "mesh"
-
-    def __init__(self, X, config: FitConfig, mesh, X_val, init_C):
-        from jax.sharding import NamedSharding, PartitionSpec as P
-
-        from repro.data.pipeline import nested_shard_layout
-
-        data_axes = config.data_axes
-        n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
-        self._config = config
-        self._mesh = mesh
-        X = np.asarray(X)
-        N_real = X.shape[0]
-        # the placement (shuffle + structural tail pads + round-robin
-        # interleave) is shared with data.pipeline.KMeansShardedSource;
-        # padded rows sit at the tail of every shard and b_local is
-        # capped below them, so they can never enter a nested prefix.
-        lay = nested_shard_layout(N_real, n_shards, seed=config.seed,
-                                  shuffle=config.shuffle)
-        if lay.n_storage > N_real:
-            X = np.concatenate(
-                [X, np.repeat(X[:1], lay.n_storage - N_real, axis=0)])
-        N = lay.n_storage
-        perm = lay.perm
-        Xh = X[perm].reshape(N // n_shards, n_shards, -1).transpose(1, 0, 2)
-        self._Xd = jax.device_put(
-            jnp.asarray(Xh.reshape(N, -1)),
-            NamedSharding(mesh, P(data_axes, None)))
-        C0 = (jnp.asarray(init_C, jnp.float32) if init_C is not None
-              else jnp.asarray(X[perm[:config.k]], jnp.float32))
-
-        state = init_state(self._Xd, config.k, bounds=config.bounds)
-        state = dataclasses.replace(
-            state, stats=dataclasses.replace(state.stats, C=C0))
-        self.state = self._place_state(state)
-
-        self._Xv = jnp.asarray(X_val) if X_val is not None else None
-        self.b = max(1, min(config.b0, N_real) // n_shards)
-        # every shard's real rows are prefix-contiguous in its storage
-        # slice; shards whose last storage row is a structural pad cap
-        # their active prefix via the per-shard n_valid mask inside the
-        # round, so b_max covers EVERY real row — including the tail
-        # rows of the low shards when N_real % n_shards != 0.
-        self.b_max = max(1, N // n_shards)
-        self.n_shards = n_shards
-        self.n_active_target = N_real
-        self._N = N
-        # per-shard real-row cap is derived inside the sharded round
-        # from the shard's axis index; None disables masking entirely
-        self._n_real = N_real if N_real % n_shards else None
-        # storage row shard*(N/s)+i holds shuffle position i*s+shard;
-        # positions >= N_real are structural pads
-        self._pos = lay.pos
-        self.orig_index = lay.orig_index()
-        self.n_points = N_real
-
-    # -- engine-layout hooks (overridden by _XLRun) -------------------------
-
-    def _place_state(self, state: KMeansState) -> KMeansState:
-        from repro.core.distributed import shard_state
-        return shard_state(state, self._mesh, self._config.data_axes)
-
-    def _stat_shardings(self):
-        """Sharding pytree of ``state.stats`` for the elastic restore."""
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        rep = NamedSharding(self._mesh, P())
-        return jax.tree.map(lambda _: rep, self.state.stats)
-
-    def nested_step(self, state, b, capacity):
-        from repro.core.distributed import make_sharded_round
-        round_fn = make_sharded_round(
-            self._mesh, self._config.data_axes, b_local=b,
-            rho=self._config.rho, bounds=self._config.bounds,
-            capacity=capacity, use_shalf=self._config.use_shalf,
-            n_real=self._n_real)
-        return round_fn(self._Xd, state)
-
-    def eval_mse(self, state):
-        if self._Xv is None:
-            return None
-        return float(full_mse(self._Xv, state.stats.C))
-
-    # -- checkpointing ------------------------------------------------------
-    # storage row shard*(N/s)+i holds shuffle position i*s+shard, so
-    # canonical order is storage gathered, permuted by _pos, pads cut.
-
-    def capture(self, state):
-        def canon(arr):
-            h = np.asarray(arr)
-            out = np.empty_like(h)
-            out[self._pos] = h
-            return out[:self.n_points]
-
-        tree = {
-            "stats": jax.tree.map(np.asarray, state.stats),
-            "a": canon(state.points.a),
-            "d": canon(state.points.d),
-            "lb": canon(state.points.lb),
-            "round": np.asarray(state.round),
-        }
-        meta = {"engine": self._engine_name, "n_shards": self.n_shards,
-                "n_points": self.n_points, "has_mb": False,
-                "has_elkan": False}
-        return tree, meta
-
-    def restore(self, store, step, meta):
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        rep = NamedSharding(self._mesh, P())
-        row = NamedSharding(self._mesh, P(self._config.data_axes))
-
-        # small leaves go through the elastic re-shard machinery (stats
-        # are stored full/canonical; _stat_shardings re-places them in
-        # this engine's layout — replicated here, k-sharded on the XL
-        # engine)
-        small = {"stats": self.state.stats, "round": self.state.round}
-        small_sh = {"stats": self._stat_shardings(), "round": rep}
-        got = store.restore(small, step=step, shardings=small_sh)
-
-        # per-point leaves come back canonical; re-pad + re-interleave
-        # for THIS mesh's shard count, then row-shard
-        pts = store.restore({"a": jnp.zeros((self.n_points,), jnp.int32),
-                             "d": jnp.zeros((self.n_points,), jnp.float32),
-                             "lb": jnp.zeros((self.n_points,),
-                                             jnp.float32)}, step=step)
-
-        def place(h, fill):
-            h = np.asarray(h)
-            full = np.full((self._N,), fill, h.dtype)
-            full[:self.n_points] = h
-            return jax.device_put(jnp.asarray(full[self._pos]), row)
-
-        points = PointState(a=place(pts["a"], -1),
-                            d=place(pts["d"], 0.0),
-                            lb=place(pts["lb"], 0.0))
-        return KMeansState(stats=got["stats"], points=points,
-                           elkan=None, round=got["round"])
-
-
-class MeshEngine:
-    """Multi-device engine: points row-sharded, cluster stats replicated.
-
-    The S/v/sse deltas are psum-reduced inside the round, so the stats —
-    and therefore the controller's growth decision — are bit-identical
-    on every shard with no host round-trip. Only the nested (gb/tb)
-    family is supported; `FitConfig.__post_init__` enforces this.
-    """
-
-    def __init__(self, mesh):
-        self.mesh = mesh
-
-    def begin(self, X, config: FitConfig, *, X_val=None,
-              init_C=None) -> EngineRun:
-        return _MeshRun(X, config, self.mesh, X_val, init_C)
-
-
-# --------------------------------------------------------------------------
-# XLEngine — centroids sharded over the model axis (kmeans_xl scale)
-# --------------------------------------------------------------------------
-
-class _XLRun(_MeshRun):
-    """A `_MeshRun` whose cluster stats are sharded over ``model_axis``.
-
-    Data placement, b units (per-data-shard rows), the n_valid tail mask
-    and the canonical checkpoint layout are all inherited from the mesh
-    run — checkpoints are written with FULL (k, d) stats, so an XL
-    checkpoint restores elastically onto local/mesh engines and onto any
-    model-axis size that divides k, and vice versa. Only the state
-    placement and the compiled round differ.
-    """
-    _engine_name = "xl"
-
-    def __init__(self, X, config: FitConfig, mesh, X_val, init_C):
-        if config.model_axis not in mesh.shape:
-            raise ValueError(
-                f"backend='xl' needs mesh axis "
-                f"{config.model_axis!r} (config.model_axis) to shard "
-                f"the centroids over, but the mesh only has axes "
-                f"{tuple(mesh.axis_names)}")
-        m = int(mesh.shape[config.model_axis])
-        if config.k % m:
-            raise ValueError(
-                f"backend='xl' shards the k={config.k} centroids over "
-                f"mesh axis {config.model_axis!r} of size {m}; k must "
-                f"divide evenly")
-        super().__init__(X, config, mesh, X_val, init_C)
-
-    def _place_state(self, state: KMeansState) -> KMeansState:
-        from repro.core.distributed_xl import shard_state_xl
-        return shard_state_xl(state, self._mesh, self._config.data_axes,
-                              self._config.model_axis)
-
-    def _stat_shardings(self):
-        from jax.sharding import NamedSharding
-
-        from repro.core.distributed_xl import xl_state_specs
-        specs = xl_state_specs(self._config.data_axes,
-                               self._config.model_axis)
-        return jax.tree.map(lambda sp: NamedSharding(self._mesh, sp),
-                            specs.stats)
-
-    def nested_step(self, state, b, capacity):
-        from repro.core.distributed_xl import make_xl_nested_round
-        round_fn = make_xl_nested_round(
-            self._mesh, self._config.data_axes,
-            model_axis=self._config.model_axis, b_local=b,
-            rho=self._config.rho, bounds=self._config.bounds,
-            capacity=capacity, use_shalf=self._config.use_shalf,
-            n_real=self._n_real,
-            kernel_backend=self._config.kernel_backend)
-        return round_fn(self._Xd, state)
-
-
-class XLEngine:
-    """Centroid-sharded engine: points over data axes, k over model.
-
-    The regime past `MeshEngine`: when k*d no longer replicates (the
-    ~10^5-centroid massive-data setting), each model shard scans only
-    its k-slice with the fused top-2 kernel, the per-point top-2 triples
-    are tree-folded over the model axis, and the S/v deltas are
-    psum_scatter'ed so no device ever materialises full-k statistics.
-    Drives the same `run_loop` (growth, overflow retry, patience,
-    checkpoints) as every other engine.
-    """
-
-    def __init__(self, mesh):
-        self.mesh = mesh
-
-    def begin(self, X, config: FitConfig, *, X_val=None,
-              init_C=None) -> EngineRun:
-        return _XLRun(X, config, self.mesh, X_val, init_C)
-
-
-def make_engine(config: FitConfig, *, mesh=None) -> Engine:
-    """Engine for ``config.backend`` ("mesh"/"xl" require a mesh)."""
-    if config.backend in ("mesh", "xl"):
-        if mesh is None:
-            raise ValueError(
-                f"backend={config.backend!r} needs a jax.sharding.Mesh")
-        return MeshEngine(mesh) if config.backend == "mesh" \
-            else XLEngine(mesh)
-    return LocalEngine()
+from repro.api.engines.base import Engine, EngineRun
+from repro.api.engines.local import (LocalEngine, _LocalRun, _lloyd_jit,
+                                     _mb_jit, nested_jit)
+from repro.api.engines.mesh import MeshEngine, _MeshRun
+from repro.api.engines.multihost import MultiHostEngine, _MultiHostRun
+from repro.api.engines.xl import XLEngine, _XLRun
+from repro.api.engines import make_engine
+from repro.api.loop import FitOutcome, cap_bucket, next_pow2, run_loop
+
+__all__ = [
+    "Engine", "EngineRun", "FitOutcome", "LocalEngine", "MeshEngine",
+    "MultiHostEngine", "XLEngine", "cap_bucket", "make_engine",
+    "nested_jit", "next_pow2", "run_loop",
+]

@@ -1,0 +1,37 @@
+"""Execution engines: one module per backend, one contract (`base`).
+
+  local      bucketed-jit rounds, single process, single device
+  mesh       shard_map over a device mesh; points row-sharded, stats
+             replicated
+  xl         mesh + centroids sharded over the model axis (k too large
+             to replicate)
+  multihost  mesh across `jax.distributed` processes (pod scale)
+
+All are driven by the ONE host loop in `repro.api.loop`; `make_engine`
+maps `FitConfig.backend` to the right one.
+"""
+from __future__ import annotations
+
+from repro.api.config import FitConfig
+from repro.api.engines.base import Engine, EngineRun
+from repro.api.engines.local import LocalEngine, nested_jit
+from repro.api.engines.mesh import MeshEngine
+from repro.api.engines.multihost import MultiHostEngine
+from repro.api.engines.xl import XLEngine
+
+__all__ = ["Engine", "EngineRun", "LocalEngine", "MeshEngine",
+           "MultiHostEngine", "XLEngine", "make_engine", "nested_jit"]
+
+
+def make_engine(config: FitConfig, *, mesh=None) -> Engine:
+    """Engine for ``config.backend`` ("mesh"/"xl" require a mesh;
+    "multihost" builds one over every process's devices when omitted)."""
+    if config.backend in ("mesh", "xl"):
+        if mesh is None:
+            raise ValueError(
+                f"backend={config.backend!r} needs a jax.sharding.Mesh")
+        return MeshEngine(mesh) if config.backend == "mesh" \
+            else XLEngine(mesh)
+    if config.backend == "multihost":
+        return MultiHostEngine(mesh)
+    return LocalEngine()

@@ -1,0 +1,180 @@
+"""The `Engine` / `EngineRun` contract every backend implements.
+
+An `Engine` owns data placement and compiled rounds; `EngineRun` is one
+fit in flight. The host loop (`repro.api.loop.run_loop`) is written
+against this contract only — it never imports a concrete engine — and
+every quantity it branches on is either a static from the resolved
+`FitConfig` or a device-computed scalar out of `RoundInfo`.
+
+Process awareness: a run may span several OS processes (the multihost
+engine). The base class defines the process hooks as single-process
+no-ops so the local/mesh/xl engines pay nothing; `_MultiHostRun`
+overrides them with `jax.distributed` collectives. The contract each
+hook must honour is documented on the hook — the loop's correctness on
+a pod rests on these contracts, not on the loop's own code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import FitConfig
+from repro.core.state import ClusterStats, KMeansState, RoundInfo
+
+
+class EngineRun:
+    """One fit in flight: placed data + initial state + round executors.
+
+    Subclasses set:
+      state            initial KMeansState (already placed/sharded)
+      b                initial batch size in ENGINE UNITS (global rows
+                       for LocalEngine, per-shard rows for MeshEngine)
+      b_max            largest batch in engine units
+      n_shards         data shards (1 for local)
+      n_active_target  info.n_active value meaning "full data active"
+      orig_index       (n_storage,) int: original caller row held at
+                       each internal storage row (-1 = structural pad)
+      n_points         caller's dataset size (pads excluded)
+    """
+    state: KMeansState
+    b: int
+    b_max: int
+    n_shards: int = 1
+    n_active_target: int = 0
+    orig_index: np.ndarray = None
+    n_points: int = 0
+
+    # -- round executors (pure: state in -> (state, info)) ------------------
+
+    def nested_step(self, state: KMeansState, b: int,
+                    capacity: Optional[int]
+                    ) -> Tuple[KMeansState, RoundInfo]:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not run the nested family")
+
+    def lloyd_step(self, state: KMeansState
+                   ) -> Tuple[KMeansState, RoundInfo]:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not run lloyd")
+
+    def mb_step(self, state: KMeansState, fixed: bool
+                ) -> Tuple[KMeansState, RoundInfo]:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not run mb/mbf")
+
+    def eval_mse(self, state: KMeansState) -> Optional[float]:
+        """Validation MSE of the current centroids (None: no val set).
+
+        Multi-process contract: must return the SAME float on every
+        process (the loop's eval cadence and telemetry feed off it).
+        """
+        return None
+
+    # -- host-side views of device state ------------------------------------
+
+    def host_points(self, state: KMeansState) -> np.ndarray:
+        """The (n_storage,) assignment vector on the host.
+
+        Multi-process contract: a collective — every process calls it at
+        the same loop point and receives the full vector.
+        """
+        return np.asarray(state.points.a)
+
+    def fetch_stats(self, state: KMeansState) -> ClusterStats:
+        """Cluster stats usable from THIS process (host or local device).
+
+        The default hands back the state's own stats leaves (fully
+        addressable on every single-process engine). Multi-process runs
+        override with a gather so `predict`/`export_codebook` on the
+        estimator never touch non-addressable shards.
+        """
+        return state.stats
+
+    def place_stats(self, state: KMeansState,
+                    stats: ClusterStats) -> KMeansState:
+        """Return ``state`` with ``stats`` placed in this engine's layout
+        (replicated / k-sharded / process-spanning as the engine needs).
+        The streaming path (`NestedKMeans.partial_fit`) uses this to
+        carry the running statistics into a freshly placed batch run."""
+        return dataclasses.replace(
+            state, stats=jax.tree.map(jnp.asarray, stats))
+
+    # -- checkpointing (canonical = global-shuffle row order) ---------------
+
+    def capture(self, state: KMeansState) -> Tuple[Dict[str, Any],
+                                                   Dict[str, Any]]:
+        """(host pytree, JSON-safe engine meta) for a checkpoint.
+
+        Per-point arrays are returned in CANONICAL order — the position
+        of each real row in the seed-determined global shuffle, pads
+        dropped. The canonical layout depends only on (seed, N_real), so
+        a checkpoint written by any engine at any shard count restores
+        onto any other (elastic restart).
+
+        Multi-process contract: a collective (it gathers sharded
+        leaves); every process calls it, only the coordinator writes the
+        result to disk.
+        """
+        raise NotImplementedError
+
+    def restore(self, store: Any, step: int,
+                meta: Dict[str, Any]) -> KMeansState:
+        """Rebuild an engine-layout state from a canonical checkpoint.
+
+        Multi-process contract: the coordinator reads the arrays and
+        broadcasts them; every process places the SAME canonical values
+        into its local shards.
+        """
+        raise NotImplementedError
+
+    # -- process awareness (single-process defaults) ------------------------
+    #
+    # The loop derives every per-round decision from shard-replicated
+    # RoundInfo scalars, so its control flow is already bit-identical on
+    # every process BY CONSTRUCTION. These hooks cover the residue: who
+    # writes checkpoints, how processes agree on host-only facts (the
+    # wall clock, what is on disk), and rendezvous points.
+
+    #: True on the process allowed to touch the checkpoint directory.
+    is_coordinator: bool = True
+
+    def barrier(self) -> None:
+        """Block until every process reaches this point (no-op single
+        process). The loop calls it around checkpoint writes so no
+        process races ahead of a save/clear it may later depend on."""
+
+    def sync_flag(self, flag: bool) -> bool:
+        """Replicate a HOST-derived boolean from the coordinator.
+
+        The one loop decision not derivable from device scalars is the
+        wall-clock budget (`time_budget_s`): clocks drift between
+        processes, so each round the coordinator's verdict is broadcast
+        and every process obeys it. Single-process: identity.
+        """
+        return bool(flag)
+
+    def resolve_resume(self, store: Any
+                       ) -> Tuple[Optional[int], Optional[Dict[str, Any]]]:
+        """(latest step, its ``extra`` dict) — replicated across
+        processes. ``(None, None)`` when the store holds no checkpoints.
+        Multi-process runs read on the coordinator and broadcast, so a
+        resume decision can never diverge on an eventually-consistent
+        filesystem."""
+        step = store.latest_step()
+        if step is None:
+            return None, None
+        return step, store.read_extra(step)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """An execution backend: owns data placement + compiled rounds."""
+
+    def begin(self, X, config: FitConfig, *,
+              X_val=None, init_C: Optional[np.ndarray] = None) -> EngineRun:
+        """Shuffle/pad/place ``X`` and build the initial state."""
+        ...

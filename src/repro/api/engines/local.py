@@ -1,0 +1,131 @@
+"""`LocalEngine` — single-process bucketed-jit rounds."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import FitConfig
+from repro.api.engines.base import EngineRun
+from repro.core import rounds
+from repro.core.state import (ElkanBounds, KMeansState, PointState,
+                              full_mse, init_state)
+
+# shared with estimator.partial_fit so streaming batches of a repeated
+# shape hit the same jit cache as fit()
+nested_jit = jax.jit(
+    rounds.nested_round,
+    static_argnames=("b", "rho", "bounds", "capacity", "use_shalf",
+                     "kernel_backend", "data_axes"))
+_mb_jit = jax.jit(rounds.mb_round,
+                  static_argnames=("fixed", "kernel_backend"))
+_lloyd_jit = jax.jit(rounds.lloyd_round, static_argnames=("kernel_backend",))
+
+
+class _LocalRun(EngineRun):
+    def __init__(self, X, config: FitConfig, X_val, init_C):
+        rng = np.random.default_rng(config.seed)
+        X = np.asarray(X)
+        N = X.shape[0]
+        perm = rng.permutation(N) if config.shuffle else np.arange(N)
+        self._Xd = jnp.asarray(X[perm])
+        self._Xv = jnp.asarray(X_val) if X_val is not None else None
+        self._config = config
+        self._rng = rng
+
+        state = init_state(self._Xd, config.k, bounds=config.bounds)
+        if init_C is not None:       # warm start (checkpoint restart)
+            state = dataclasses.replace(state, stats=dataclasses.replace(
+                state.stats, C=jnp.asarray(init_C, jnp.float32)))
+        self.state = state
+        self.b = min(config.b0, N)
+        self.b_max = N
+        self.n_shards = 1
+        self.n_active_target = N
+        self.orig_index = perm        # storage row i holds X[perm[i]]
+        self.n_points = N
+        # mb/mbf resampling stream (paper footnote 1: cycle a reshuffle)
+        self._mb_pos = 0
+        self._mb_perm = rng.permutation(N)
+
+    def nested_step(self, state, b, capacity):
+        return nested_jit(self._Xd, state, b=b, rho=self._config.rho,
+                          bounds=self._config.bounds, capacity=capacity,
+                          use_shalf=self._config.use_shalf,
+                          kernel_backend=self._config.kernel_backend)
+
+    def lloyd_step(self, state):
+        return _lloyd_jit(self._Xd, state,
+                          kernel_backend=self._config.kernel_backend)
+
+    def mb_step(self, state, fixed):
+        N, b = self.b_max, self.b
+        if self._mb_pos + b > N:
+            self._mb_perm = self._rng.permutation(N)
+            self._mb_pos = 0
+        idx = jnp.asarray(self._mb_perm[self._mb_pos:self._mb_pos + b])
+        self._mb_pos += b
+        return _mb_jit(self._Xd, idx, state, fixed=fixed,
+                       kernel_backend=self._config.kernel_backend)
+
+    def eval_mse(self, state):
+        if self._Xv is None:
+            return None
+        return float(full_mse(self._Xv, state.stats.C))
+
+    # -- checkpointing ------------------------------------------------------
+    # storage row i holds shuffle position i, so storage order IS the
+    # canonical order for the local engine.
+
+    def capture(self, state):
+        tree = {
+            "stats": jax.tree.map(np.asarray, state.stats),
+            "a": np.asarray(state.points.a),
+            "d": np.asarray(state.points.d),
+            "lb": np.asarray(state.points.lb),
+            "round": np.asarray(state.round),
+            "mb_perm": np.asarray(self._mb_perm),
+        }
+        if state.elkan is not None:
+            tree["elkan_l"] = np.asarray(state.elkan.l)
+        meta = {
+            "engine": "local", "n_shards": 1, "n_points": self.n_points,
+            "has_mb": True, "has_elkan": state.elkan is not None,
+            "mb_pos": self._mb_pos,
+            "rng_state": self._rng.bit_generator.state,
+        }
+        return tree, meta
+
+    def restore(self, store, step, meta):
+        proto = {"stats": self.state.stats,
+                 "a": self.state.points.a, "d": self.state.points.d,
+                 "lb": self.state.points.lb, "round": self.state.round}
+        if meta.get("has_elkan"):
+            if self.state.elkan is None:
+                raise ValueError(
+                    "checkpoint carries elkan bounds but this config "
+                    "does not use bounds='elkan'")
+            proto["elkan_l"] = self.state.elkan.l
+        if meta.get("has_mb"):
+            proto["mb_perm"] = jnp.asarray(self._mb_perm)
+        got = store.restore(proto, step=step)
+        if meta.get("has_mb"):
+            self._mb_perm = np.asarray(got["mb_perm"])
+            self._mb_pos = int(meta["mb_pos"])
+        if meta.get("rng_state") is not None:
+            self._rng.bit_generator.state = meta["rng_state"]
+        points = PointState(a=got["a"], d=got["d"], lb=got["lb"])
+        elkan = (ElkanBounds(l=got["elkan_l"]) if meta.get("has_elkan")
+                 else None)
+        return KMeansState(stats=got["stats"], points=points,
+                           elkan=elkan, round=got["round"])
+
+
+class LocalEngine:
+    """Single-process engine over the bucketed-jit round functions."""
+
+    def begin(self, X, config: FitConfig, *, X_val=None,
+              init_C=None) -> EngineRun:
+        return _LocalRun(X, config, X_val, init_C)

@@ -24,8 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import FitConfig
-from repro.api.engine import (Engine, FitOutcome, make_engine, nested_jit,
-                              run_loop)
+from repro.api.engines import Engine, make_engine, nested_jit
+from repro.api.loop import FitOutcome, run_loop
 from repro.api.telemetry import RoundCallback, Telemetry
 from repro.checkpoint.store import CheckpointStore
 from repro.core.state import full_mse, init_state
@@ -89,15 +89,22 @@ class NestedKMeans:
         """
         with self._lock:
             cfg = self.config.resolve(int(np.asarray(X).shape[0]))
+            if resume and cfg.checkpoint is None:
+                raise ValueError(
+                    "fit(resume=True) requires config.checkpoint")
+            run = self.engine.begin(X, cfg, X_val=X_val, init_C=init_C)
             resume_from = None
+            resolved = None
             if resume:
-                if cfg.checkpoint is None:
-                    raise ValueError(
-                        "fit(resume=True) requires config.checkpoint")
                 store = CheckpointStore(cfg.checkpoint.checkpoint_dir,
                                         keep=cfg.checkpoint.keep)
-                if store.latest_step() is not None:
-                    extra = store.read_extra()
+                # the resume decision goes through the run so it is
+                # process-replicated: on multihost the coordinator's
+                # filesystem is the source of truth and its verdict is
+                # broadcast — no process can start fresh while another
+                # restores
+                step, extra = run.resolve_resume(store)
+                if step is not None:
                     saved = (extra or {}).get("config")
                     if saved:
                         want = cfg.to_dict()
@@ -109,11 +116,15 @@ class NestedKMeans:
                                 f"resuming config on {bad}; refusing to "
                                 f"restore a foreign fit")
                     resume_from = store
-            run = self.engine.begin(X, cfg, X_val=X_val, init_C=init_C)
+                    resolved = (step, extra)
             out = run_loop(run, cfg, on_round=self.on_round,
-                           resume_from=resume_from)
+                           resume_from=resume_from,
+                           resolved_resume=resolved)
             self._outcome = out
-            self._stats = out.state.stats
+            # fetch_stats: the state's own leaves on single-process
+            # engines; a host gather on multihost (so predict/export
+            # never touch non-addressable shards)
+            self._stats = run.fetch_stats(out.state)
             self._outcome_stale = False
             # copy: later partial_fit records must not mutate the
             # outcome's own telemetry history
@@ -128,34 +139,57 @@ class NestedKMeans:
         means — the exact update a batch doubling applies to new points
         inside `fit`. Repeated calls keep absorbing traffic at O(batch)
         cost per call.
+
+        Runs on ANY backend: the local engine streams through one jitted
+        round; the sharded engines (mesh/xl/multihost) place the batch
+        with their usual layout and run one full-prefix sharded round,
+        carrying the running statistics in via `EngineRun.place_stats`.
+        Each distinct batch shape compiles one executable per backend —
+        stream fixed-size micro-batches (as `repro.serve.ClusterService`
+        does) to stay on one.
         """
-        if self.config.backend != "local":
-            raise NotImplementedError(
-                "partial_fit currently runs on the local engine only; "
-                "stream with backend='local' (mesh streaming is a "
-                "ROADMAP item)")
         with self._lock:
             X = np.asarray(X)
             cfg = self.config.resolve(int(X.shape[0]))
-            Xd = jnp.asarray(X)
-            state = init_state(Xd, cfg.k, bounds=cfg.bounds)
-            if self._stats is not None:
-                # carry the running statistics; bounds state restarts per
-                # batch (new points have no history to bound against)
-                state = dataclasses.replace(state, stats=self._stats)
-            elif X.shape[0] < cfg.k:
+            if self._stats is None and X.shape[0] < cfg.k:
                 raise ValueError(
                     f"first partial_fit batch must have >= k={cfg.k} "
                     f"rows (repro.serve.IngestQueue accumulates sub-k "
                     f"contributions into a big-enough first batch)")
             t_prev = self.telemetry_[-1].t if self.telemetry_ else 0.0
             t0 = time.perf_counter()
-            new_state, info = nested_jit(
-                Xd, state, b=int(X.shape[0]), rho=cfg.rho,
-                bounds=cfg.bounds, capacity=None, use_shalf=cfg.use_shalf,
-                kernel_backend=cfg.kernel_backend)
-            jax.block_until_ready(new_state.stats.C)
-            self._stats = new_state.stats
+            if cfg.backend == "local":
+                Xd = jnp.asarray(X)
+                state = init_state(Xd, cfg.k, bounds=cfg.bounds)
+                if self._stats is not None:
+                    # carry the running statistics; bounds state restarts
+                    # per batch (new points have no history to bound
+                    # against)
+                    state = dataclasses.replace(
+                        state, stats=jax.tree.map(jnp.asarray,
+                                                  self._stats))
+                new_state, info = nested_jit(
+                    Xd, state, b=int(X.shape[0]), rho=cfg.rho,
+                    bounds=cfg.bounds, capacity=None,
+                    use_shalf=cfg.use_shalf,
+                    kernel_backend=cfg.kernel_backend)
+                jax.block_until_ready(new_state.stats.C)
+                new_stats = new_state.stats
+            else:
+                # sharded streaming: place the batch like a fit would
+                # (shuffle + interleave + structural pads are harmless —
+                # the S/v delta is order-independent and pads are masked
+                # out by n_valid), then run ONE full-prefix round
+                run = self.engine.begin(
+                    X, cfg, init_C=(np.asarray(self._stats.C)
+                                    if self._stats is not None else None))
+                state = run.state
+                if self._stats is not None:
+                    state = run.place_stats(state, self._stats)
+                new_state, info = run.nested_step(state, run.b_max, None)
+                jax.block_until_ready(new_state.stats.C)
+                new_stats = run.fetch_stats(new_state)
+            self._stats = new_stats
             if self._outcome is not None:
                 # the centroids have moved past the fit's outcome: its
                 # labels/state no longer describe this estimator
@@ -226,6 +260,15 @@ class NestedKMeans:
         """Per-cluster membership counts v (codebook occupancy)."""
         self._require_fitted()
         return np.asarray(self._stats.v)
+
+    @property
+    def stats_(self):
+        """The running `ClusterStats` (C/S/v/sse/p) — host-reachable on
+        every backend (fit/partial_fit store them through the engine's
+        `fetch_stats`, so even a multi-process fit's stats can be read,
+        adopted or re-placed from any one process)."""
+        self._require_fitted()
+        return self._stats
 
     def _require_fresh_outcome(self, what: str):
         if self._outcome is None:

@@ -1,0 +1,325 @@
+"""THE host control loop, shared by every engine — and every process.
+
+One `run_loop` drives the growth schedule, power-of-two capacity
+bucketing, overflow retry, convergence patience, telemetry and in-loop
+checkpointing for all backends (local / mesh / xl / multihost).
+
+## The process-replicated control-flow invariant
+
+On a multi-process (jax.distributed) run EVERY process executes this
+loop over its own copy of the host state. There is no leader election
+and no per-round consensus protocol; instead the loop is written so its
+control flow is bit-identical on every process BY CONSTRUCTION:
+
+  * every per-round decision — batch growth (`info.grow`), capacity
+    sizing (`info.n_recomputed`), overflow retry (`info.overflow`),
+    convergence patience (`info.n_changed` / `info.p_max` /
+    `info.n_active`) — branches ONLY on scalars out of `RoundInfo`,
+    which the round functions psum-reduce across every data shard
+    before returning. A replicated device scalar fetched on two
+    processes yields the same bits, so both take the same branch.
+  * the data placement, initial centroids and the mini-batch resampling
+    stream are all seeded deterministically from the resolved
+    `FitConfig` (`config.seed`), never from ambient host entropy, so
+    every process holds the same global shuffle and the same schedule
+    inputs at round 0.
+  * the ONE intrinsically host-local quantity — the wall clock behind
+    `time_budget_s` — is resolved by the coordinator and broadcast
+    through `run.sync_flag` before anyone acts on it (clocks drift;
+    replicated flags do not). With the default infinite budget the
+    hook is never consulted.
+  * filesystem facts (which checkpoint step is latest, its metadata)
+    go through `run.resolve_resume`, which multi-process runs answer
+    on the coordinator and broadcast.
+
+Checkpoint writes are coordinator-only (`run.is_coordinator`), with a
+`run.barrier()` after every save/clear so no process races ahead of a
+directory state it may later restore from. `run.capture` / `restore`
+are collectives — every process participates in the gathers and
+broadcasts even though only one touches the disk.
+
+Anything appended to this loop must preserve the invariant: derive new
+decisions from `RoundInfo` (extend it if needed — it is psum-reduced in
+one place per engine), or route them through a `run` hook that
+guarantees replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.api.config import FitConfig
+from repro.api.engines.base import EngineRun
+from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
+from repro.checkpoint.store import CheckpointStore
+from repro.core.state import KMeansState, RoundInfo
+
+
+# --------------------------------------------------------------------------
+# result record
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FitOutcome:
+    """What a fit produces: centroids + full state + structured telemetry.
+
+    ``labels`` is in the CALLER's row order (the engines shuffle and, on
+    a mesh, interleave/pad internally; the inverse mapping is applied
+    here). ``-1`` marks rows the nested batch never reached.
+    """
+    C: np.ndarray
+    state: KMeansState
+    labels: np.ndarray
+    telemetry: List[Telemetry]
+    converged: bool
+    algorithm: str
+    config: FitConfig
+
+    @property
+    def final_mse(self) -> float:
+        return final_val_mse(self.telemetry)
+
+
+# --------------------------------------------------------------------------
+# capacity policy (shared)
+# --------------------------------------------------------------------------
+
+def next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def cap_bucket(need: int, b: int, floor: int) -> Optional[int]:
+    """Power-of-two capacity with 2x slack; None == recompute everything."""
+    cap = max(floor, next_pow2(2 * max(need, 1)))
+    return None if cap >= b else cap
+
+
+# --------------------------------------------------------------------------
+# THE shared host loop
+# --------------------------------------------------------------------------
+
+def run_loop(run: EngineRun, config: FitConfig, *,
+             on_round: Optional[RoundCallback] = None,
+             resume_from: Optional[Union[str, Path, CheckpointStore]] = None,
+             resolved_resume: Optional[Tuple[int, Dict[str, Any]]] = None,
+             trace: Optional[List[Dict[str, Any]]] = None
+             ) -> FitOutcome:
+    """Growth schedule + capacity bucketing + overflow retry + patience.
+
+    ``config`` must already be `resolve()`d (no alias algorithms). The
+    loop is backend-agnostic AND process-agnostic: see the module
+    docstring for the replication invariant that makes the same code
+    drive one device, a host mesh, or a multi-process pod.
+
+    When ``config.checkpoint`` is set, the FULL loop state — engine
+    state, batch size, capacity bucket, patience counter, work clock and
+    telemetry — is saved atomically every ``save_every`` rounds (plus
+    once at loop exit) alongside the ``config.to_dict()`` manifest.
+    ``resume_from`` (a directory or `CheckpointStore`) restores the
+    latest such checkpoint through the engine's canonical layout, so a
+    killed fit continues bit-identically — and a fit checkpointed on
+    one shard count (or process count) resumes on another (elastic
+    restart). ``resolved_resume``: the ``(step, extra)`` pair a caller
+    already obtained from ``run.resolve_resume`` on the same store
+    (the estimator validates the manifest first); passing it avoids a
+    second read — and on multihost a second cluster-wide broadcast —
+    of the same payload.
+
+    ``trace``: optional list; one dict per completed round —
+    ``{"round", "b_global", "capacity", "quiet_rounds"}`` — is appended
+    AFTER the round's schedule updates. This is the loop's control-flow
+    fingerprint: two processes of the same multihost fit must produce
+    identical traces (scripts/smoke_multihost.py asserts exactly that).
+    """
+    algorithm = config.algorithm
+    bounds = config.bounds
+    state = run.state
+    b = run.b
+    capacity: Optional[int] = None
+    telemetry: List[Telemetry] = []
+    t_work = 0.0
+    quiet_rounds = 0
+    converged = False
+    start_round = 0
+    timed = math.isfinite(config.time_budget_s)
+
+    ckpt = config.checkpoint
+    store = (CheckpointStore(ckpt.checkpoint_dir, keep=ckpt.keep)
+             if ckpt is not None else None)
+
+    if store is not None and resume_from is None:
+        # a FRESH checkpointed fit supersedes whatever run lives in the
+        # directory: left in place, the old (higher-numbered) steps
+        # would garbage-collect this run's early saves on arrival and a
+        # later resume would silently restore the stale fit
+        if run.is_coordinator and store.latest_step() is not None:
+            store.clear()
+        run.barrier()
+
+    if resume_from is not None:
+        rstore = (resume_from if isinstance(resume_from, CheckpointStore)
+                  else CheckpointStore(resume_from,
+                                       keep=ckpt.keep if ckpt else 3))
+        step, extra = (resolved_resume if resolved_resume is not None
+                       else run.resolve_resume(rstore))
+        if step is None:
+            raise FileNotFoundError(
+                f"resume_from={resume_from!r} holds no checkpoints")
+        if not extra or "loop" not in extra:
+            raise ValueError(
+                f"checkpoint step {step} has no loop metadata; it was "
+                f"not written by run_loop")
+        emeta, loop = extra["engine"], extra["loop"]
+        state = run.restore(rstore, step, emeta)
+        telemetry = [Telemetry.from_dict(r) for r in extra["telemetry"]]
+        t_work = float(loop["t_work"])
+        quiet_rounds = int(loop["quiet_rounds"])
+        converged = bool(loop.get("converged", False))
+        start_round = int(loop["rounds_done"])
+        # b is stored in GLOBAL rows; ceil-divide onto this engine's
+        # shard count so every previously-seen point stays inside the
+        # prefix when the shard count changed across the restore.
+        b = max(1, min(-(-int(loop["b_global"]) // run.n_shards),
+                       run.b_max))
+        cap = loop.get("capacity")
+        capacity = (int(cap) if cap is not None
+                    and int(emeta.get("n_shards", 0)) == run.n_shards
+                    else None)
+        run.barrier()
+
+    def record(info: RoundInfo) -> None:
+        rec = Telemetry(
+            round=len(telemetry), t=t_work, b=int(info.n_active),
+            batch_mse=float(info.batch_mse),
+            n_changed=int(info.n_changed),
+            n_recomputed=int(info.n_recomputed),
+            grow=bool(info.grow), r_median=float(info.r_median),
+            val_mse=(run.eval_mse(state)
+                     if len(telemetry) % config.eval_every == 0 else None))
+        telemetry.append(rec)
+        if on_round:
+            on_round(rec)
+
+    def save_checkpoint() -> None:
+        # capture is a collective (it gathers sharded leaves); every
+        # process runs it, only the coordinator touches the disk
+        tree, emeta = run.capture(state)
+        extra = {
+            "config": config.to_dict(),
+            "engine": emeta,
+            "loop": {"rounds_done": len(telemetry),
+                     "b_global": b * run.n_shards, "capacity": capacity,
+                     "quiet_rounds": quiet_rounds, "t_work": t_work,
+                     "converged": converged},
+            "telemetry": [r.to_dict() for r in telemetry],
+        }
+        if run.is_coordinator:
+            store.save(len(telemetry), tree, extra=extra,
+                       background=ckpt.background)
+        run.barrier()
+
+    for _ in range(start_round, config.max_rounds):
+        if converged:        # resumed an already-finished fit
+            break
+        if timed:
+            # the wall clock is the one host-local input to the
+            # schedule: the coordinator decides, every process obeys
+            if run.sync_flag(t_work >= config.time_budget_s):
+                break
+        t0 = time.perf_counter()
+
+        if algorithm == "lloyd":
+            new_state, info = run.lloyd_step(state)
+        elif algorithm in ("mb", "mbf"):
+            new_state, info = run.mb_step(state, fixed=(algorithm == "mbf"))
+        else:  # tb family (incl. gb via bounds="none")
+            while True:
+                new_state, info = run.nested_step(state, b, capacity)
+                if not bool(info.overflow):
+                    break
+                # overflow retry: same input state, doubled bucket —
+                # exactness is never traded for speed.
+                capacity = (None if capacity is None or 2 * capacity >= b
+                            else 2 * capacity)
+
+        jax.block_until_ready(new_state.stats.C)
+        t_work += time.perf_counter() - t0
+        state = new_state
+        record(info)
+
+        if algorithm == "tb":
+            if bounds == "hamerly2":
+                need = -(-int(info.n_recomputed) // run.n_shards)
+                if bool(info.grow) and b < run.b_max:
+                    # a doubling adds b new points that always need a
+                    # full pass — start the grown bucket dense
+                    capacity = None
+                else:
+                    capacity = cap_bucket(need, b, config.capacity_floor)
+            if bool(info.grow):
+                b = min(2 * b, run.b_max)
+            # p_max rides along in the psum-consistent RoundInfo — no
+            # extra device->host sync outside the timed region
+            if (int(info.n_active) >= run.n_active_target
+                    and int(info.n_changed) == 0
+                    and float(info.p_max) == 0.0):
+                quiet_rounds += 1
+            else:
+                quiet_rounds = 0
+            if trace is not None:
+                trace.append({"round": len(telemetry) - 1,
+                              "b_global": b * run.n_shards,
+                              "capacity": capacity,
+                              "quiet_rounds": quiet_rounds})
+            if quiet_rounds >= config.converge_patience:
+                converged = True
+                break
+        elif algorithm == "lloyd":
+            if int(info.n_changed) == 0:
+                converged = True
+                break
+
+        if store is not None and len(telemetry) % ckpt.save_every == 0:
+            save_checkpoint()
+
+    if store is not None:
+        # one final save so a resumed-after-finish fit is a no-op loop
+        save_checkpoint()
+        if run.is_coordinator:
+            store.wait()
+        run.barrier()
+
+    # final validation point (outside the timed region, like every eval),
+    # unless the last in-loop round already evaluated validation — a
+    # second eval at the same t would double-count it in the telemetry
+    if telemetry and telemetry[-1].val_mse is not None:
+        final = None
+    else:
+        final = run.eval_mse(state)
+    if final is not None:
+        # b is per-shard; b * n_shards includes the structural pad rows
+        # on a non-divisible mesh, so cap at the real dataset size
+        telemetry.append(Telemetry(
+            round=len(telemetry), t=t_work,
+            b=min(b * run.n_shards, run.n_points),
+            batch_mse=None, n_changed=0, n_recomputed=0, grow=False,
+            r_median=None, val_mse=final))
+
+    # un-shuffle the final assignments back to the caller's row order;
+    # host_points is a gather collective on multi-process runs
+    a = np.asarray(run.host_points(state))
+    labels = np.full(run.n_points, -1, np.int32)
+    valid = run.orig_index >= 0
+    labels[run.orig_index[valid]] = a[valid]
+
+    stats = run.fetch_stats(state)
+    return FitOutcome(C=np.asarray(stats.C), state=state,
+                      labels=labels, telemetry=telemetry,
+                      converged=converged, algorithm=algorithm,
+                      config=config)

@@ -27,8 +27,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import controller, rounds
-from repro.core.state import (ClusterStats, KMeansState, PointState,
-                              RoundInfo)
+from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
+                              PointState, RoundInfo)
 from repro.kernels import ops
 
 
@@ -93,8 +93,13 @@ def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
     row = P(data_axes)
     pt_specs = PointState(a=row, d=row, lb=row)
     st_specs = ClusterStats(C=P(), S=P(), v=P(), sse=P(), p=P())
+    # the per-(i, j) elkan lower bounds row-shard with the points (the
+    # k column stays replicated like C); the n_valid mask keeps pad
+    # rows out of the bound updates exactly as for hamerly2
+    elkan_specs = (ElkanBounds(l=P(data_axes, None))
+                   if bounds == "elkan" else None)
     state_specs = KMeansState(stats=st_specs, points=pt_specs,
-                              elkan=None, round=P())
+                              elkan=elkan_specs, round=P())
     info_specs = RoundInfo(**{f.name: P() for f in
                               dataclasses.fields(RoundInfo)})
 
@@ -144,7 +149,7 @@ def fit_distributed(X,
     """DEPRECATED multi-device entry point — shim over `repro.api`.
 
     The sharded host loop that used to live here is now
-    `repro.api.engine.run_loop` driving a `MeshEngine`; this wrapper
+    `repro.api.loop.run_loop` driving a `MeshEngine`; this wrapper
     keeps the historical signature and dict telemetry. Semantically
     identical to driver.fit(algorithm="tb") modulo the batch
     composition: the global batch is the union of equal per-shard
@@ -340,7 +345,7 @@ def make_xl_round(mesh: Mesh, *, k: int,
     data-parallel ``make_dp_round`` dominates it — see §Perf. ``rho``
     is a static cache key threading the config's growth threshold to
     the controller. The loop-driven engine over this layout is
-    `repro.api.engine.XLEngine` (see `core.distributed_xl`)."""
+    `repro.api.engines.xl.XLEngine` (see `core.distributed_xl`)."""
     row = P(data_axes)
     kshard = P(model_axis)
 

@@ -2,7 +2,7 @@
 
 `core.distributed.make_xl_round` is a stateless dense round: every call
 re-assigns every point against fresh S/v. This module is the
-nested-prefix counterpart that `repro.api.engine.XLEngine` drives
+nested-prefix counterpart that `repro.api.engines.xl.XLEngine` drives
 through the shared host loop (`run_loop`): per-shard prefix batching
 with ``n_valid`` masking, previously-seen-point delta S/v, Hamerly
 bounding, growth, overflow retry and checkpointing — the full Alg. 6/9
@@ -51,8 +51,8 @@ from repro.core import controller, rounds
 from repro.core.distributed import (assign_top2_sharded, per_shard_n_valid,
                                     shard_map_compat)
 from repro.core.rounds import _euclid
-from repro.core.state import (ClusterStats, KMeansState, PointState,
-                              RoundInfo, centroid_update)
+from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
+                              PointState, RoundInfo, centroid_update)
 from repro.kernels import ops, ref
 
 
@@ -108,6 +108,62 @@ def _half_intercentroid_sharded(C_local: jax.Array, model_axis: str,
                                    axis=1))
     s_half_loc = 0.5 * _euclid(best)
     return jax.lax.all_gather(s_half_loc, model_axis, tiled=True)  # (k,)
+
+
+def _fold_min_idx(da, ia, db, ib):
+    """Combine two (min, argmin) pairs; ties take the LOWER global index
+    (associative + commutative, so the fold order cannot change the
+    winner — and it matches `jnp.argmin`'s first-minimum rule on the
+    unsharded row)."""
+    take_b = (db < da) | ((db == da) & (ib < ia))
+    return jnp.minimum(da, db), jnp.where(take_b, ib, ia)
+
+
+def _assign_elkan_xl(x, state, a_prev, valid, *, k_local: int,
+                     k_offset, model_axis: str):
+    """`rounds._assign_elkan` with the k column sharded over the model
+    axis: each shard holds the (b, k_local) slice of the lower-bound
+    matrix l and of its C/p slices, runs the bound test locally, and the
+    per-shard (min, argmin) candidates are tree-folded into the global
+    assignment. Bit-compatible with the local path on a 1-shard model
+    axis (every collective collapses to the identity)."""
+    C_local = state.stats.C
+    seen = a_prev >= 0
+    l_dec = state.elkan.l[:x.shape[0]] - state.stats.p[None, :]  # eq. (4)
+    d_a = _dist_to_assigned_sharded(x, C_local, a_prev, k_offset,
+                                    model_axis)
+
+    d_all = _euclid(ref.pairwise_dist2(x, C_local))     # (b, k_local)
+    cols = k_offset + jnp.arange(k_local)[None, :]      # GLOBAL indices
+    own = cols == a_prev[:, None]
+    compute = (l_dec < d_a[:, None]) & ~own             # bound test
+    compute = compute | ~seen[:, None]                  # new pts: all k
+    if valid is not None:
+        compute = compute & valid[:, None]
+
+    l_new = jnp.where(compute, d_all, l_dec)
+    cand = jnp.where(compute, d_all, jnp.inf)
+    cand = jnp.where(own & seen[:, None], d_a[:, None], cand)
+    # local winner carries its GLOBAL index; fold across model shards
+    a_loc = (jnp.argmin(cand, axis=1).astype(jnp.int32) + k_offset)
+    d_loc = jnp.min(cand, axis=1)
+    ds = jax.lax.all_gather(d_loc, model_axis)          # (m, b)
+    ias = jax.lax.all_gather(a_loc, model_axis)
+    while ds.shape[0] > 1:
+        half = ds.shape[0] // 2
+        d, ia = _fold_min_idx(ds[:half], ias[:half],
+                              ds[half:2 * half], ias[half:2 * half])
+        if ds.shape[0] % 2:            # odd: carry the tail row over
+            d = jnp.concatenate([d, ds[2 * half:]])
+            ia = jnp.concatenate([ia, ias[2 * half:]])
+        ds, ias = d, ia
+    a_new, d_new = ias[0].astype(jnp.int32), ds[0]
+    # pair computations across the whole k row + the per-point d_a's
+    # (pads are never seen, so they add nothing to the second term)
+    n_comp = jax.lax.psum(jnp.sum(compute.astype(jnp.int32)),
+                          model_axis) \
+        + jnp.sum(seen.astype(jnp.int32))
+    return a_new, d_new, None, n_comp, jnp.asarray(False), l_new
 
 
 def _chunk_rows(arrs, *, m: int, model_axis: str):
@@ -200,7 +256,10 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
     refresh upper bound + decayed second-nearest lower bound, with the
     threshold's s(j)/2 table built from all-gathered per-shard slices,
     and the same capacity compaction / overflow-retry contract as the
-    local round). RoundInfo is replica-consistent on every device.
+    local round) and "elkan" (paper-faithful per-(i, j) bounds with
+    the l matrix's k column sharded over the model axis —
+    `_assign_elkan_xl`). RoundInfo is replica-consistent on every
+    device.
     """
     k_local = state.stats.C.shape[0]
     k = k_local * m
@@ -223,6 +282,7 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
     if bounds == "none":
         a_new, d_new, lb2, n_rec, overflow, _ = rounds._assign_exhaustive(
             x, state, a_prev, valid, assign_top2_fn=assign_fn)
+        l_new = None
     elif bounds == "hamerly2":
         p_max = jax.lax.pmax(jnp.max(state.stats.p), model_axis)
         d_a = _dist_to_assigned_sharded(x, C_local, a_prev, k_offset,
@@ -234,14 +294,24 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
             use_shalf=use_shalf, kernel_backend=kernel_backend,
             p_max=p_max, d_assigned=d_a, s_half=s_half,
             assign_top2_fn=assign_fn)
+        l_new = None
+    elif bounds == "elkan":
+        a_new, d_new, lb2, n_rec, overflow, l_new = _assign_elkan_xl(
+            x, state, a_prev, valid, k_local=k_local, k_offset=k_offset,
+            model_axis=model_axis)
     else:
         raise ValueError(f"unsupported bounds for the XL engine: "
-                         f"{bounds!r} (use 'none' or 'hamerly2')")
+                         f"{bounds!r} (use 'none', 'hamerly2' or "
+                         f"'elkan')")
 
     if valid is not None:
         a_new = jnp.where(valid, a_new, jnp.int32(-1))
         d_new = jnp.where(valid, d_new, 0.0)
-        lb2 = jnp.where(valid, lb2, 0.0)
+        if lb2 is not None:
+            lb2 = jnp.where(valid, lb2, 0.0)
+        if l_new is not None:
+            # pads keep a stable zero bound (their lanes are dead)
+            l_new = jnp.where(valid[:, None], l_new, 0.0)
 
     dS, dv = _delta_sv_xl(x, a_prev, a_new, k, m=m, model_axis=model_axis,
                           data_axes=data_axes,
@@ -275,8 +345,13 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
     points = dataclasses.replace(
         state.points,
         a=state.points.a.at[:b].set(a_new),
-        d=state.points.d.at[:b].set(d_new),
-        lb=state.points.lb.at[:b].set(lb2))
+        d=state.points.d.at[:b].set(d_new))
+    if lb2 is not None:
+        points = dataclasses.replace(
+            points, lb=points.lb.at[:b].set(lb2))
+    elkan = state.elkan
+    if l_new is not None:
+        elkan = ElkanBounds(l=state.elkan.l.at[:b].set(l_new))
 
     info = RoundInfo(
         batch_mse=mse_num / jnp.maximum(mse_den, 1.0),
@@ -284,7 +359,7 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
         overflow=overflow.astype(jnp.bool_), grow=grow, r_median=r_med,
         p_max=jax.lax.pmax(jnp.max(stats.p), model_axis))
     new_state = dataclasses.replace(state, stats=stats, points=points,
-                                    elkan=None, round=state.round + 1)
+                                    elkan=elkan, round=state.round + 1)
     return new_state, info
 
 
@@ -292,14 +367,20 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
 # shard_map factory + placement helpers
 # --------------------------------------------------------------------------
 
-def xl_state_specs(data_axes: Tuple[str, ...], model_axis: str):
-    """PartitionSpec pytree of the XL engine's KMeansState layout."""
+def xl_state_specs(data_axes: Tuple[str, ...], model_axis: str,
+                   *, elkan: bool = False):
+    """PartitionSpec pytree of the XL engine's KMeansState layout.
+
+    ``elkan``: include the per-(i, j) lower-bound matrix, rows sharded
+    with the points and the k column sharded with the centroids.
+    """
     row = P(data_axes)
     stats = ClusterStats(C=P(model_axis, None), S=P(model_axis, None),
                          v=P(model_axis), sse=P(model_axis),
                          p=P(model_axis))
     points = PointState(a=row, d=row, lb=row)
-    return KMeansState(stats=stats, points=points, elkan=None, round=P())
+    el = ElkanBounds(l=P(data_axes, model_axis)) if elkan else None
+    return KMeansState(stats=stats, points=points, elkan=el, round=P())
 
 
 @functools.lru_cache(maxsize=None)
@@ -317,7 +398,8 @@ def make_xl_nested_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
     power-of-two (b, capacity) pair), same per-shard ``n_valid``
     derivation from ``n_real`` — plus the model-axis stat sharding.
     """
-    state_specs = xl_state_specs(data_axes, model_axis)
+    state_specs = xl_state_specs(data_axes, model_axis,
+                                 elkan=(bounds == "elkan"))
     info_specs = RoundInfo(**{f.name: P() for f in
                               dataclasses.fields(RoundInfo)})
     sizes = tuple(int(mesh.shape[a]) for a in data_axes)

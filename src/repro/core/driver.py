@@ -2,7 +2,7 @@
 
 The host loop that used to live here (bucketed jit, growth schedule,
 capacity bucketing, overflow retry, telemetry) moved to
-`repro.api.engine.run_loop` + `LocalEngine`, where it is shared with the
+`repro.api.loop.run_loop` + `LocalEngine`, where it is shared with the
 shard_map backend. `fit()` keeps the historical kwargs signature and the
 dict-based telemetry records so existing callers and tests keep working;
 new code should use `repro.api.NestedKMeans` / `repro.api.fit`.

@@ -268,13 +268,17 @@ def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
     return a_new, d_new, lb_new, jnp.minimum(n_need, capacity), overflow, None
 
 
-def _assign_elkan(x, state, a_prev, *, b: int):
+def _assign_elkan(x, state, a_prev, valid, *, b: int):
     """Paper-faithful tb bounds (supp. Alg. 9/11): l(i,j), one per pair.
 
     Vectorised semantics (see DESIGN.md): all bound-passing distances are
     computed at once instead of serially; the final assignment is
     identical, and ``n_recomputed`` counts the pair-distance computations
     a serial implementation would have had to do (upper bound thereof).
+
+    ``valid`` masks structural pad rows (mesh engines, N % n_shards
+    != 0): their compute mask is forced off, so they never touch a
+    distance, and the caller resets their outputs to the sentinel.
     """
     C = state.stats.C
     k = C.shape[0]
@@ -287,14 +291,17 @@ def _assign_elkan(x, state, a_prev, *, b: int):
     own = cols == a_prev[:, None]
     compute = (l_dec < d_a[:, None]) & ~own                 # bound test
     compute = compute | ~seen[:, None]                      # new pts: all k
+    if valid is not None:
+        compute = compute & valid[:, None]
 
     l_new = jnp.where(compute, d_all, l_dec)
     cand = jnp.where(compute, d_all, jnp.inf)
     cand = jnp.where(own & seen[:, None], d_a[:, None], cand)
     a_new = jnp.argmin(cand, axis=1).astype(jnp.int32)
     d_new = jnp.min(cand, axis=1)
+    # + the d_a's (pads are never seen, so they add nothing here)
     n_comp = jnp.sum(compute.astype(jnp.int32)) \
-        + jnp.sum(seen.astype(jnp.int32))                   # + the d_a's
+        + jnp.sum(seen.astype(jnp.int32))
     return a_new, d_new, None, n_comp, jnp.asarray(False), l_new
 
 
@@ -338,12 +345,8 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
             x, state, a_prev, valid, capacity=capacity,
             use_shalf=use_shalf, kernel_backend=kernel_backend)
     elif bounds == "elkan":
-        if valid is not None:
-            raise NotImplementedError(
-                "n_valid masking is not plumbed through the elkan "
-                "bounds (the mesh engine never runs them)")
         a_new, d_new, lb2, n_rec, overflow, l_new = \
-            _assign_elkan(x, state, a_prev, b=b)
+            _assign_elkan(x, state, a_prev, valid, b=b)
     else:
         raise ValueError(f"unknown bounds {bounds!r}")
 
@@ -352,6 +355,9 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
         d_new = jnp.where(valid, d_new, 0.0)
         if lb2 is not None:
             lb2 = jnp.where(valid, lb2, 0.0)
+        if l_new is not None:
+            # pads keep a stable zero bound (their lanes are dead)
+            l_new = jnp.where(valid[:, None], l_new, 0.0)
 
     dS, dv = _delta_sv(x, a_prev, a_new, k, kernel_backend)
     sse = _refresh_sse(d_new, a_new, k)

@@ -3,7 +3,7 @@
 `nested_shard_layout` is THE host-side description of how the mesh
 engine places points: shuffle, structural tail padding to a multiple of
 the shard count, and the interleave that makes the union of per-shard
-prefixes equal the global shuffle prefix. `repro.api.engine._MeshRun`
+prefixes equal the global shuffle prefix. `repro.api.engines.mesh._MeshRun`
 and `KMeansShardedSource` both build on it, so the streaming source and
 the device placement can never drift apart (tested for parity).
 
@@ -67,6 +67,18 @@ class ShardLayout:
         """(n_storage,) original data row at each storage row (-1 = pad)."""
         orig = self.perm[self.pos]
         return np.where(orig < self.n_real, orig, -1)
+
+    def shard_orig_rows(self, s: int) -> np.ndarray:
+        """(rows_per_shard,) original data row at each storage row OF
+        SHARD ``s``, in storage order (-1 = structural pad).
+
+        This is the per-process placement primitive: a multihost
+        process materialises only its own shards' rows —
+        ``X[shard_orig_rows(s)]`` with pads mapped to ``X[0]`` — instead
+        of the full padded permutation of the dataset.
+        """
+        r = self.rows_per_shard
+        return self.orig_index()[s * r:(s + 1) * r]
 
 
 def nested_shard_layout(n_real: int, n_shards: int, *, seed: int = 0,

@@ -42,14 +42,15 @@ def build_codebook(E: np.ndarray, k: int, seed: int, *,
     exactly what a resuming operator does not want.
 
     ``backend`` selects the execution engine for the FIT: "local"
-    (default), "mesh" (points sharded over the host devices) or "xl"
-    (points AND centroids sharded — the large-k regime). The mesh is
+    (default), "mesh" (points sharded over the host devices), "xl"
+    (points AND centroids sharded — the large-k regime) or "multihost"
+    (the mesh engine across jax.distributed processes). The mesh is
     built over whatever devices are visible; checkpoints restore
     elastically across backends, so a fit checkpointed locally resumes
     sharded and vice versa. The returned estimator is always a LOCAL
     one — a sharded fit's outcome is adopted onto the local engine so
-    downstream streaming (`ClusterService` -> `partial_fit`, which is
-    local-only) keeps working.
+    downstream serving streams without rebuilding a sharded layout per
+    micro-batch (partial_fit itself runs on any backend now).
     """
     if resume and not checkpoint_dir:
         raise ValueError(
@@ -79,15 +80,17 @@ def build_codebook(E: np.ndarray, k: int, seed: int, *,
     km = NestedKMeans(cfg, mesh=mesh)
     km.fit(E, resume=resume)
     if backend != "local":
-        # hand the sharded outcome to a local estimator: partial_fit
-        # streaming is local-only. Only the (k, d)-sized cluster stats
-        # are pulled to host — they are all adopt()/predict ever read;
-        # gathering the row-sharded per-point arrays would concentrate
-        # the whole dataset's state on one device for nothing.
+        # hand the sharded outcome to a local estimator, so downstream
+        # serving streams without standing up a sharded layout per
+        # micro-batch. Only the (k, d)-sized cluster stats are pulled —
+        # km.stats_ is host-reachable on every backend (multihost fits
+        # gather them through the engine at fit time); gathering the
+        # row-sharded per-point arrays would concentrate the whole
+        # dataset's state on one device for nothing.
         import dataclasses
         out = km.outcome_
         stats = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)),
-                             out.state.stats)
+                             km.stats_)
         out = dataclasses.replace(
             out, state=dataclasses.replace(out.state, stats=stats))
         km = NestedKMeans(dataclasses.replace(cfg, backend="local"))
@@ -114,10 +117,11 @@ def main():
                     help="resume a killed codebook fit from "
                          "--checkpoint-dir (error without it)")
     ap.add_argument("--codebook-backend", default="local",
-                    choices=("local", "mesh", "xl"),
+                    choices=("local", "mesh", "xl", "multihost"),
                     help="execution engine for the codebook fit: local "
                          "| mesh (points sharded) | xl (points + "
-                         "centroids sharded, for large K)")
+                         "centroids sharded, for large K) | multihost "
+                         "(jax.distributed processes)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced

@@ -55,10 +55,11 @@ def main():
                     help="cluster the trained embedding table into K "
                          "cells via repro.api and report VQ stats")
     ap.add_argument("--codebook-backend", default="local",
-                    choices=("local", "mesh", "xl"),
+                    choices=("local", "mesh", "xl", "multihost"),
                     help="engine for the codebook fit: local | mesh "
                          "(points sharded over the visible devices) | "
-                         "xl (points + centroids sharded — large K)")
+                         "xl (points + centroids sharded — large K) | "
+                         "multihost (jax.distributed processes)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced

@@ -46,7 +46,10 @@ class ClusterService:
                    happens once the queue has accumulated >= k rows (the
                    queue lifts the first-batch >= k constraint out of
                    producers, who may ingest any number of rows at a
-                   time).
+                   time). ANY backend works: `partial_fit` routes each
+                   micro-batch through the estimator's engine, so a
+                   mesh/xl/multihost-backed codebook refreshes sharded
+                   while predict keeps serving from snapshots.
       queue        optional pre-built `IngestQueue` (policy, bounds).
       micro_batch  refresh batch size the refresher aims for; steady
                    traffic drains in exactly this shape, so every

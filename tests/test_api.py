@@ -50,12 +50,17 @@ def test_fitconfig_defaults_roundtrip():
     dict(k=8, kernel_backend="cuda"),
     dict(k=8, backend="tpu-pod"),
     dict(k=8, backend="mesh", algorithm="mb"),   # mesh is nested-only
-    dict(k=8, backend="mesh", bounds="elkan"),   # elkan state not sharded
     dict(k=8, backend="xl", algorithm="lloyd"),  # xl is nested-only
-    dict(k=8, backend="xl", bounds="elkan"),
+    dict(k=8, backend="multihost", algorithm="mbf"),
     dict(k=8, backend="xl", model_axis=""),      # needs a real axis name
     dict(k=8, backend="xl", data_axes=("model",),
          model_axis="model"),                    # axes must be disjoint
+    # coordinator fields: all three together, and multihost-only
+    dict(k=8, backend="multihost", coordinator_address="localhost:1"),
+    dict(k=8, backend="mesh", coordinator_address="localhost:1",
+         num_processes=2, process_id=0),
+    dict(k=8, backend="multihost", coordinator_address="localhost:1",
+         num_processes=2, process_id=2),         # id out of range
 ])
 def test_fitconfig_validation_rejects(bad):
     with pytest.raises(ValueError):
@@ -175,12 +180,26 @@ def test_legacy_algorithms_list_matches_api():
     assert driver.ALGORITHMS == api.ALGORITHMS
 
 
-def test_partial_fit_rejects_mesh_backend():
-    km = api.NestedKMeans(
-        api.FitConfig(k=4, backend="mesh"),
-        engine=api.LocalEngine())   # engine injected; config still mesh
-    with pytest.raises(NotImplementedError, match="local"):
-        km.partial_fit(np.zeros((8, 4), np.float32))
+def test_partial_fit_runs_sharded(blobs):
+    """partial_fit streams through the configured engine (the old
+    local-only restriction is gone): a mesh-backed stream on a trivial
+    1-device mesh matches the local stream after a shared fit."""
+    import jax
+    X, _ = blobs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    km_l = api.NestedKMeans(api.FitConfig(k=8, b0=512, seed=0))
+    km_m = api.NestedKMeans(api.FitConfig(k=8, b0=512, seed=0,
+                                          backend="mesh"), mesh=mesh)
+    km_l.fit(X[:2048])
+    km_m.fit(X[:2048])
+    for i in range(2):
+        batch = X[2048 + i * 500:2048 + (i + 1) * 500]
+        km_l.partial_fit(batch)
+        km_m.partial_fit(batch)
+    assert km_m.counts_.sum() == km_l.counts_.sum()
+    assert km_m.telemetry_[-1].b == 500
+    np.testing.assert_allclose(km_l.cluster_centers_,
+                               km_m.cluster_centers_, atol=1e-3)
 
 
 # ---------------------------------------------------------------------------
@@ -269,6 +288,40 @@ def test_make_engine_selects_backend():
         api.make_engine(api.FitConfig(k=4, backend="mesh"))
     with pytest.raises(ValueError, match="Mesh"):
         api.make_engine(api.FitConfig(k=4, backend="xl"))
+    # multihost builds its own mesh lazily (at begin) when none given
+    assert isinstance(api.make_engine(api.FitConfig(k=4,
+                                                    backend="multihost")),
+                      api.MultiHostEngine)
+
+
+def test_fitconfig_multihost_roundtrip():
+    cfg = api.FitConfig(k=8, backend="multihost",
+                        coordinator_address="localhost:1234",
+                        num_processes=2, process_id=1)
+    back = api.FitConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert back == cfg
+    assert (back.coordinator_address, back.num_processes,
+            back.process_id) == ("localhost:1234", 2, 1)
+
+
+def test_multihost_single_device_matches_mesh(blobs):
+    """backend="multihost" with one process and one device is the mesh
+    engine bit for bit (the multi-device / multi-process face of this
+    parity chain lives in scripts/smoke_multihost.py)."""
+    import jax
+    X, _ = blobs
+    cfg = api.FitConfig(k=8, b0=512, max_rounds=40, seed=0)
+    mesh = jax.make_mesh((1,), ("data",))
+    out_m = api.fit(X, dataclasses.replace(cfg, backend="mesh"),
+                    mesh=mesh)
+    out_h = api.fit(X, dataclasses.replace(cfg, backend="multihost"))
+    assert out_m.converged and out_h.converged
+    np.testing.assert_array_equal(out_m.C, out_h.C)
+    np.testing.assert_array_equal(out_m.labels, out_h.labels)
+    for ra, rb in zip(out_m.telemetry, out_h.telemetry):
+        da, db = ra.to_dict(), rb.to_dict()
+        da.pop("t"), db.pop("t")
+        assert da == db
 
 
 def test_xl_engine_begin_on_trivial_mesh():

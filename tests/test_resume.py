@@ -165,7 +165,7 @@ def test_no_duplicate_final_val_record(blobs, blobs_val):
 # n_valid masking (the unit-level face of the mesh tail-row fix)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("bounds", ["none", "hamerly2"])
+@pytest.mark.parametrize("bounds", ["none", "hamerly2", "elkan"])
 def test_nested_round_n_valid_masks_tail(bounds):
     """nested_round(n_valid=m) == nested_round over X[:m]: masked tail
     rows stay unassigned and contribute nothing to the statistics."""

@@ -302,3 +302,26 @@ def test_estimator_partial_fit_is_thread_safe(stream_blobs):
     assert float(np.sum(km.counts_)) == pytest.approx(
         n0 + 4 * batches * per_thread)
     assert km.n_rounds_ == len(km.telemetry_)
+
+
+def test_service_background_refresh_runs_sharded(stream_blobs):
+    """The ROADMAP serving follow-up: a mesh-backed estimator streams
+    through the service's background refresher (partial_fit routes
+    through the configured engine now, not just the local one)."""
+    import jax
+    k = 8
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    km = NestedKMeans(FitConfig(k=k, b0=256, max_rounds=30, seed=0,
+                                backend="mesh"), mesh=mesh)
+    km.fit(stream_blobs[:1000])
+    svc = ClusterService(km, micro_batch=256, flush_after_s=0.01).start()
+    try:
+        n0 = float(np.sum(km.counts_))
+        svc.ingest(stream_blobs[1000:2024])
+        assert wait_until(lambda: svc.queue.depth == 0)
+    finally:
+        svc.stop()
+    assert float(np.sum(km.counts_)) == pytest.approx(n0 + 1024)
+    labels = svc.predict(stream_blobs[:64])
+    assert labels.shape == (64,) and labels.max() < k
+    assert svc.snapshot.verify()
