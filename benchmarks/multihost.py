@@ -46,7 +46,8 @@ def _cost_to_target(telemetry, target):
 
 
 def child(quick: bool) -> None:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    from repro.util.env import force_host_device_count
+    force_host_device_count(4)
     import dataclasses
 
     import jax

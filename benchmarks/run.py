@@ -26,7 +26,7 @@ def main() -> int:
                     help="paper-scale datasets / longer budgets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,table2,pruning,"
-                         "roofline,serve,xl,multihost")
+                         "roofline,serve,xl,multihost,outofcore")
     ap.add_argument("--suite", dest="only",
                     help="alias for --only")
     args = ap.parse_args()
@@ -47,9 +47,10 @@ def main() -> int:
     api.fit = recording_fit
 
     from benchmarks import (fig1_mse_vs_time, fig2_rho_effect, multihost,
-                            pruning_effectiveness, roofline_report,
-                            serve_latency, table1_throughput,
-                            table2_final_quality, xl_engine)
+                            outofcore, pruning_effectiveness,
+                            roofline_report, serve_latency,
+                            table1_throughput, table2_final_quality,
+                            xl_engine)
     suites = {
         "table1": table1_throughput.main,
         "fig1": fig1_mse_vs_time.main,
@@ -60,6 +61,7 @@ def main() -> int:
         "serve": serve_latency.main,
         "xl": xl_engine.main,
         "multihost": multihost.main,
+        "outofcore": outofcore.main,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     ok = True

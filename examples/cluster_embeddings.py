@@ -36,3 +36,21 @@ print(f"codebook usage: min={sizes.min()} max={sizes.max()} "
       f"empty={int((sizes == 0).sum())}")
 compression = E.shape[0] * E.shape[1] / (K * E.shape[1] + E.shape[0])
 print(f"compression ratio vs raw table: {compression:.1f}x")
+
+# -- out-of-core: the same fit streamed off disk ----------------------------
+# For embedding corpora that don't fit in host memory, write them once
+# to a chunked store (repro.data.store) and hand the store path to the
+# estimator — the fit streams the nested prefix from disk. Done here
+# with the same table so the in-memory run above is the reference.
+import tempfile                                              # noqa: E402
+
+from repro.data.store import write_store                     # noqa: E402
+
+store_dir = tempfile.mkdtemp(prefix="embed_store_") + "/table"
+write_store(store_dir, E, chunk_rows=4096)
+km_disk = NestedKMeans(FitConfig(k=K, algorithm="tb", rho=float("inf"),
+                                 b0=128, bounds="hamerly2",
+                                 max_rounds=200, seed=0)).fit(store_dir)
+print(f"streamed-from-disk codebook: converged={km_disk.converged_} "
+      f"rounds={km_disk.n_rounds_} "
+      f"VQ-MSE {-km_disk.score(E) / E.shape[0]:.6f}")

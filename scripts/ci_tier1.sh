@@ -43,4 +43,10 @@ if [ "$#" -eq 0 ]; then
     # with identical control-flow traces + kill-one-process resume).
     # Outer budget > the test's own 900 s subprocess timeout.
     timeout 1000 python -m pytest -x -q tests/test_multihost.py
+    # the out-of-core data plane (fast format/source/fit-parity tests
+    # ran above; this adds the slow-marked subprocess smoke: stored-fit
+    # bit-parity on local/mesh/xl/multihost, kill-and-resume from disk,
+    # the dataset-fingerprint resume gate, and a 2-process cluster
+    # streaming off one store directory).
+    timeout 1000 python -m pytest -x -q tests/test_store.py
 fi

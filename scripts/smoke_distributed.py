@@ -1,6 +1,6 @@
 """Dev smoke: distributed engine on 8 host devices (run via subprocess)."""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.util.env import force_host_device_count
+force_host_device_count(8)
 
 import jax
 import jax.numpy as jnp

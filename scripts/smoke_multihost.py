@@ -54,8 +54,8 @@ def _dataset():
 
 
 def child(proc: int, port: str, workdir: str) -> None:
-    os.environ["XLA_FLAGS"] = \
-        f"--xla_force_host_platform_device_count={DEV_PER_PROC}"
+    from repro.util.env import force_host_device_count
+    force_host_device_count(DEV_PER_PROC)
     import dataclasses
     import json
 
@@ -133,7 +133,8 @@ def child(proc: int, port: str, workdir: str) -> None:
 # ---------------------------------------------------------------------------
 
 def main() -> None:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    from repro.util.env import force_host_device_count
+    force_host_device_count(4)
     import dataclasses
     import json
     import socket

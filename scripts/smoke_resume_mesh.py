@@ -10,8 +10,8 @@ dataset size that is NOT a multiple of the shard count:
   * the same checkpoint restores elastically onto a different shard
     count and onto the LocalEngine, converging to the same quality.
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+from repro.util.env import force_host_device_count
+force_host_device_count(4)
 
 import dataclasses
 import tempfile

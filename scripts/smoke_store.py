@@ -1,0 +1,316 @@
+"""Out-of-core data-plane end-to-end check (run via tests/test_store.py).
+
+The contract under test: a fit streamed off an on-disk `ChunkStore` is
+BIT-IDENTICAL (centroids, labels, round-by-round schedule) to the
+in-memory fit over the same row sequence — on every backend — while
+reading each chunk about once. "Same row sequence" is precise: a stored
+fit replays ``X[store_permutation(...)]`` (the chunk-blocked shuffle),
+so the reference is an in-memory fit of exactly that array with
+``shuffle=False``.
+
+Parent process (4 forced host devices, single process):
+
+  1. local / mesh / xl stored fits, each bitwise against its in-memory
+     reference (N % n_shards != 0, ragged tail chunk live);
+  2. multihost(1 process) stored == mesh stored, bitwise;
+  3. read accounting: the store's own metrics show the prefix-delta
+     frontier reads well under ~1.6x one full pass at smoke scale
+     (boundary chunks dominate at 256-row chunks; the benchmark gates
+     the production ratio at 1.1x);
+  4. kill-and-resume from the same store: bitwise continuation, plus
+     the dataset-fingerprint gate — resuming against a DIFFERENT store
+     is a loud ValueError;
+  5. checkpoint corruption: a flipped byte in a chunk fails the crc on
+     a verifying reader.
+
+Child processes (2 x 2 forced host devices, a REAL jax.distributed
+cluster over a localhost coordinator):
+
+  6. both processes stream off the SAME store directory through their
+     own read handles; stored == in-memory multihost bitwise per
+     process; identical control-flow traces across processes; each
+     process reads the frontier chunks about ONCE per fit (shards
+     interleave inside chunks, so the saving is the prefix-delta
+     schedule, not a 1/P split);
+  7. kill-one-process resume: the 2-process stored fit's checkpoint
+     continues on a 1-process MeshEngine from the same store with the
+     identical schedule (floats to reduction-order tolerance).
+"""
+import os
+import sys
+
+N_PROC = 2
+DEV_PER_PROC = 2
+K, D, N = 8, 16, 4001            # 4001 % 4 != 0: tail rows exist
+CHUNK_ROWS = 256                 # 16 chunks, ragged 161-row tail
+
+
+def _dataset(seed=0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(K, D)) * 5
+    return (centers[rng.integers(0, K, N)]
+            + rng.normal(size=(N, D))).astype(np.float32)
+
+
+def _clean_telemetry(telemetry):
+    out = []
+    for r in telemetry:
+        d = r.to_dict()
+        d.pop("t")                   # wall-clock is process/run-local
+        out.append(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# child: one process of the 2-process CPU cluster
+# ---------------------------------------------------------------------------
+
+def child(proc: int, port: str, workdir: str) -> None:
+    from repro.util.env import force_host_device_count
+    force_host_device_count(DEV_PER_PROC)
+    import dataclasses
+    import json
+
+    import numpy as np
+
+    from repro import api
+    from repro.data.store import ChunkStore, store_permutation
+
+    store_dir = os.path.join(workdir, "store")
+    ck_kill = api.CheckpointConfig(
+        checkpoint_dir=os.path.join(workdir, "ck_kill"), save_every=4)
+    cfg = api.FitConfig(
+        k=K, algorithm="tb", b0=512, max_rounds=80, seed=1,
+        backend="multihost", capacity_floor=256,
+        coordinator_address=f"localhost:{port}",
+        num_processes=N_PROC, process_id=proc)
+
+    # -- 6. stored fit across 2 REAL processes ---------------------------
+    st = ChunkStore(store_dir)
+    km = api.NestedKMeans(cfg)
+    run = km.engine.begin(st, cfg.resolve(N))
+    trace = []
+    out = api.run_loop(run, cfg.resolve(N), trace=trace)
+    assert out.converged
+    assert int((out.labels < 0).sum()) == 0, "unlabeled real rows"
+
+    # per-process read accounting: shards interleave inside chunks, so
+    # a process reads every frontier chunk — but only ONCE per fit (the
+    # prefix-delta schedule), not once per round. The bound is one full
+    # pass plus the k-row init and chunk-boundary slack.
+    one_pass = N * D * 4
+    ratio = st.metrics.bytes_read / one_pass
+    assert ratio < 1.3, f"per-process read ratio {ratio:.2f}"
+
+    # the stored fit must equal the in-memory multihost fit over the
+    # same row sequence, bitwise, even across processes
+    perm = store_permutation(N, CHUNK_ROWS, cfg.seed)
+    Xp = st.rows(0, N)[perm]
+    out_mem = api.fit(Xp, dataclasses.replace(cfg, shuffle=False))
+    np.testing.assert_array_equal(out.C, out_mem.C)
+    np.testing.assert_array_equal(out.labels[perm], out_mem.labels)
+    assert _clean_telemetry(out.telemetry) == \
+        _clean_telemetry(out_mem.telemetry)
+
+    telem = _clean_telemetry(out.telemetry)
+    with open(os.path.join(workdir, f"trace_{proc}.json"), "w") as f:
+        json.dump({"trace": trace, "telemetry": telem,
+                   "read_ratio": ratio}, f)
+    if proc == 0:
+        np.save(os.path.join(workdir, "C_full.npy"), out.C)
+
+    # -- 7a. the interrupted stored fit: killed at round 9 ---------------
+    cfg_kill = dataclasses.replace(cfg, max_rounds=9, checkpoint=ck_kill)
+    api.NestedKMeans(cfg_kill).fit(ChunkStore(store_dir))
+    print(f"[child {proc}] stored 2-process fit bit-identical to "
+          f"in-memory ({len(telem)} rounds, read ratio {ratio:.2f})",
+          flush=True)
+
+
+# ---------------------------------------------------------------------------
+# parent: single-process checks + cluster orchestration
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    from repro.util.env import force_host_device_count
+    force_host_device_count(2 * DEV_PER_PROC)
+    import dataclasses
+    import json
+    import socket
+    import subprocess
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro import api
+    from repro.data.store import (ChunkStore, dataset_fingerprint,
+                                  store_permutation, write_store)
+    from repro.launch.mesh import make_multihost_mesh
+
+    X = _dataset()
+    workroot = tempfile.mkdtemp(prefix="smoke_store_")
+    store_dir = os.path.join(workroot, "store")
+    write_store(store_dir, X, chunk_rows=CHUNK_ROWS)
+    perm = store_permutation(N, CHUNK_ROWS, 1)
+    Xp = X[perm]                     # the stored fits' exact row sequence
+    one_pass = X.nbytes
+
+    mesh1d = make_multihost_mesh()   # (4,) over the forced host devices
+    mesh22 = jax.make_mesh((2, 2), ("data", "model"))
+    cfg = api.FitConfig(k=K, algorithm="tb", b0=512, max_rounds=80,
+                        seed=1, capacity_floor=256)
+    cfg_mem = dataclasses.replace(cfg, shuffle=False)
+
+    def assert_bitwise(out_s, out_m, what):
+        np.testing.assert_array_equal(out_s.C, out_m.C)
+        np.testing.assert_array_equal(out_s.labels[perm], out_m.labels)
+        assert _clean_telemetry(out_s.telemetry) == \
+            _clean_telemetry(out_m.telemetry), what
+        assert int((out_s.labels < 0).sum()) == 0
+        print(f"{what} stored fit: bit-identical to in-memory over "
+              f"{len(out_s.telemetry)} rounds")
+
+    # -- 1. stored == in-memory on local / mesh / xl ---------------------
+    st = ChunkStore(store_dir)
+    out_local = api.fit(st, cfg)
+    assert_bitwise(out_local, api.fit(Xp, cfg_mem), "local")
+    ratio_local = st.metrics.bytes_read / one_pass
+
+    st = ChunkStore(store_dir)
+    out_mesh = api.fit(st, dataclasses.replace(cfg, backend="mesh"),
+                       mesh=mesh1d)
+    assert_bitwise(out_mesh,
+                   api.fit(Xp, dataclasses.replace(cfg_mem,
+                                                   backend="mesh"),
+                           mesh=mesh1d), "mesh")
+    ratio_mesh = st.metrics.bytes_read / one_pass
+
+    out_xl = api.fit(ChunkStore(store_dir),
+                     dataclasses.replace(cfg, backend="xl",
+                                         model_axis="model"),
+                     mesh=mesh22)
+    assert_bitwise(out_xl,
+                   api.fit(Xp, dataclasses.replace(cfg_mem, backend="xl",
+                                                   model_axis="model"),
+                           mesh=mesh22), "xl")
+
+    # -- 2. multihost(1 process) stored == mesh stored, bitwise ----------
+    out_mh = api.fit(ChunkStore(store_dir),
+                     dataclasses.replace(cfg, backend="multihost"),
+                     mesh=mesh1d)
+    np.testing.assert_array_equal(out_mesh.C, out_mh.C)
+    np.testing.assert_array_equal(out_mesh.labels, out_mh.labels)
+    assert _clean_telemetry(out_mesh.telemetry) == \
+        _clean_telemetry(out_mh.telemetry)
+    print("multihost(1 process) stored == mesh stored: bit-identical")
+
+    # -- 3. read accounting: the prefix-delta frontier -------------------
+    # 256-row chunks make boundary slack visible; the production ratio
+    # (65536-row chunks) is gated at 1.1x by benchmarks/outofcore.py
+    for name, ratio in (("local", ratio_local), ("mesh", ratio_mesh)):
+        assert ratio < 1.6, f"{name} read ratio {ratio:.2f}"
+    print(f"read amplification: local {ratio_local:.2f}x, mesh "
+          f"{ratio_mesh:.2f}x of one full pass (prefix-delta fetching)")
+
+    # -- 4. kill-and-resume from the same store --------------------------
+    ckdir = os.path.join(workroot, "ck")
+    ck = api.CheckpointConfig(checkpoint_dir=ckdir, save_every=4)
+    cfg_ck = dataclasses.replace(cfg, backend="mesh", checkpoint=ck)
+    api.fit(ChunkStore(store_dir),
+            dataclasses.replace(cfg_ck, max_rounds=9), mesh=mesh1d)
+    km_r = api.NestedKMeans(cfg_ck, mesh=mesh1d)
+    km_r.fit(ChunkStore(store_dir), resume=True)
+    assert km_r.converged_
+    np.testing.assert_array_equal(out_mesh.C, km_r.cluster_centers_)
+    np.testing.assert_array_equal(out_mesh.labels, km_r.labels_)
+    print("stored kill-and-resume: bit-identical continuation")
+
+    # ... and the dataset-fingerprint gate: a DIFFERENT store (or a
+    # different in-memory array) must be refused loudly
+    other_dir = os.path.join(workroot, "store_other")
+    write_store(other_dir, _dataset(seed=7), chunk_rows=CHUNK_ROWS)
+    try:
+        api.NestedKMeans(cfg_ck, mesh=mesh1d).fit(ChunkStore(other_dir),
+                                                  resume=True)
+        raise AssertionError("resume against a different store passed")
+    except ValueError as e:
+        assert "different dataset" in str(e), e
+    fp = dataset_fingerprint(ChunkStore(store_dir))
+    assert fp != dataset_fingerprint(ChunkStore(other_dir))
+    print("resume against a different store: refused "
+          "(fingerprint mismatch)")
+
+    # -- 5. corruption detection -----------------------------------------
+    bad_dir = os.path.join(workroot, "store_bad")
+    write_store(bad_dir, X, chunk_rows=CHUNK_ROWS)
+    with open(os.path.join(bad_dir, "data.bin"), "r+b") as f:
+        f.seek(3 * CHUNK_ROWS * D * 4 + 17)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    bad = ChunkStore(bad_dir, verify=True)
+    try:
+        bad.chunk(3)
+        raise AssertionError("corrupt chunk read verified")
+    except IOError as e:
+        assert "corrupt" in str(e)
+    print("chunk corruption: crc verification catches a flipped byte")
+
+    # -- 6 + 7. the real 2-process cluster -------------------------------
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        port = str(s.getsockname()[1])
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    procs = [subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__),
+         "--child", str(i), port, workroot],
+        env=env, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        for i in range(N_PROC)]
+    for p in procs:
+        assert p.wait(timeout=600) == 0, "child process failed"
+
+    traces = []
+    for i in range(N_PROC):
+        with open(os.path.join(workroot, f"trace_{i}.json")) as f:
+            traces.append(json.load(f))
+    assert traces[0]["trace"] == traces[1]["trace"]
+    assert traces[0]["telemetry"] == traces[1]["telemetry"]
+    print(f"2-process stored cluster: identical traces over "
+          f"{len(traces[0]['telemetry'])} rounds; per-process reads "
+          f"{traces[0]['read_ratio']:.2f}x / {traces[1]['read_ratio']:.2f}x "
+          f"of one pass (prefix-delta: the store is read once per fit)")
+
+    # -- 7b. kill-one-process resume from the same store -----------------
+    C2 = np.load(os.path.join(workroot, "C_full.npy"))
+    ck = api.CheckpointConfig(
+        checkpoint_dir=os.path.join(workroot, "ck_kill"), save_every=4)
+    km = api.NestedKMeans(dataclasses.replace(
+        cfg, backend="mesh", checkpoint=ck), mesh=mesh1d)
+    km.fit(ChunkStore(store_dir), resume=True)
+    assert km.converged_
+    resumed = _clean_telemetry(km.telemetry_)
+    want = traces[0]["telemetry"]
+    assert len(resumed) == len(want)
+    for ra, wa in zip(resumed, want):
+        for key in ("round", "b", "n_changed", "n_recomputed", "grow"):
+            assert ra[key] == wa[key], (ra, wa)
+        if wa["batch_mse"] is not None:
+            assert abs(ra["batch_mse"] - wa["batch_mse"]) \
+                <= 1e-4 * abs(wa["batch_mse"]), (ra, wa)
+    np.testing.assert_allclose(C2, km.cluster_centers_, atol=1e-5)
+    print("kill-one-process resume from the store: 2-process checkpoint "
+          "continued on 1 process with the identical schedule")
+
+    print("store smoke OK")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        i = sys.argv.index("--child")
+        child(int(sys.argv[i + 1]), sys.argv[i + 2], sys.argv[i + 3])
+    else:
+        main()

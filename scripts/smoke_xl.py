@@ -19,8 +19,8 @@ the whole stack with 8 forced host devices:
   5. config rho reaches the controller (growth under rho=0.5) and the
      gb (bounds="none") family runs sharded.
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.util.env import force_host_device_count
+force_host_device_count(8)
 
 import dataclasses
 import tempfile

@@ -106,6 +106,13 @@ class FitConfig:
                   (mesh/xl/multihost).
       model_axis  mesh axis the centroids are sharded over (xl only);
                   k must divide by the axis size.
+      data_source path of an on-disk `repro.data.store` chunk store to
+                  stream the training rows from (out-of-core fits).
+                  `NestedKMeans.fit()` may then be called with no X; a
+                  store path or `ChunkStore` passed directly to fit()
+                  takes precedence. Nested family only — mb/lloyd
+                  resample or scan the full dataset each round, which
+                  defeats the bounded-memory prefix streaming.
       checkpoint  optional `CheckpointConfig`: save the full loop state
                   every N rounds so the fit can be killed and resumed
                   (see `NestedKMeans.fit(resume=True)`). On multihost
@@ -133,6 +140,7 @@ class FitConfig:
     backend: str = "local"
     data_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
+    data_source: Optional[str] = None
     checkpoint: Optional[CheckpointConfig] = None
     coordinator_address: Optional[str] = None
     num_processes: Optional[int] = None
@@ -175,6 +183,17 @@ class FitConfig:
             raise ValueError(
                 f"the {self.backend} engine only runs the nested family "
                 f"(gb/tb/lloyd-elkan); got algorithm={self.algorithm!r}")
+        if self.data_source is not None:
+            if not isinstance(self.data_source, str) or not self.data_source:
+                raise ValueError(
+                    f"data_source must be a non-empty store path, got "
+                    f"{self.data_source!r}")
+            if self.algorithm not in NESTED_ALGOS:
+                raise ValueError(
+                    f"data_source streams the nested prefix from disk; "
+                    f"algorithm={self.algorithm!r} rescans or resamples "
+                    f"the full dataset each round (pass X in memory "
+                    f"instead)")
         coord = (self.coordinator_address, self.num_processes,
                  self.process_id)
         if any(c is not None for c in coord) \

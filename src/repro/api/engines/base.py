@@ -39,6 +39,11 @@ class EngineRun:
       orig_index       (n_storage,) int: original caller row held at
                        each internal storage row (-1 = structural pad)
       n_points         caller's dataset size (pads excluded)
+      data_fingerprint JSON-safe content identity of the fitted dataset
+                       (`repro.data.store.dataset_fingerprint`); written
+                       into checkpoint extras so a resume against a
+                       different dataset fails loudly. None disables
+                       the check.
     """
     state: KMeansState
     b: int
@@ -47,6 +52,7 @@ class EngineRun:
     n_active_target: int = 0
     orig_index: np.ndarray = None
     n_points: int = 0
+    data_fingerprint: Optional[Dict[str, Any]] = None
 
     # -- round executors (pure: state in -> (state, info)) ------------------
 

@@ -24,16 +24,48 @@ _mb_jit = jax.jit(rounds.mb_round,
 _lloyd_jit = jax.jit(rounds.lloyd_round, static_argnames=("kernel_backend",))
 
 
+# rows fetched off a ChunkStore per device-buffer update: bounds the
+# host memory in flight and keeps the update-jit cache at one executable
+# for full segments plus a handful of ragged tails
+_IO_SEG_ROWS = 65536
+
+
 class _LocalRun(EngineRun):
     def __init__(self, X, config: FitConfig, X_val, init_C):
+        from repro.data.store import (ChunkStore, dataset_fingerprint,
+                                      store_permutation)
         rng = np.random.default_rng(config.seed)
-        X = np.asarray(X)
-        N = X.shape[0]
-        perm = rng.permutation(N) if config.shuffle else np.arange(N)
-        self._Xd = jnp.asarray(X[perm])
+        self._store = X if isinstance(X, ChunkStore) else None
+        if self._store is not None:
+            # out-of-core: a zero device buffer filled lazily to the
+            # current nested prefix (`_ensure_prefix`); the host never
+            # holds more than one fetch segment of rows at a time. The
+            # chunk-blocked permutation keeps the disk frontier
+            # sequential — see repro.data.store.source.
+            N = self._store.n
+            perm = store_permutation(N, self._store.chunk_rows,
+                                     config.seed, shuffle=config.shuffle)
+            self._Xd = jnp.zeros((N, self._store.d), jnp.float32)
+            self._filled = 0
+            self._upd = jax.jit(
+                lambda Xd, u, at: jax.lax.dynamic_update_slice(
+                    Xd, u, (at, 0)),
+                donate_argnums=0)
+            self.data_fingerprint = self._store.fingerprint()
+        else:
+            X = np.asarray(X)
+            N = X.shape[0]
+            perm = rng.permutation(N) if config.shuffle else np.arange(N)
+            self._Xd = jnp.asarray(X[perm])
+            self._filled = N
+            self.data_fingerprint = dataset_fingerprint(X)
         self._Xv = jnp.asarray(X_val) if X_val is not None else None
         self._config = config
         self._rng = rng
+        self._perm = perm
+        if self._store is not None:
+            # paper init needs the first k shuffled rows materialised
+            self._ensure_prefix(min(N, max(config.k, 1)))
 
         state = init_state(self._Xd, config.k, bounds=config.bounds)
         if init_C is not None:       # warm start (checkpoint restart)
@@ -50,7 +82,23 @@ class _LocalRun(EngineRun):
         self._mb_pos = 0
         self._mb_perm = rng.permutation(N)
 
+    def _ensure_prefix(self, b: int) -> None:
+        """Fill the device buffer with shuffled rows [filled, b) off the
+        store, in bounded segments. No-op for in-memory fits and for
+        already-covered prefixes — steady-state rounds fetch nothing."""
+        if self._store is None or b <= self._filled:
+            return
+        lo = self._filled
+        while lo < b:
+            hi = min(b, lo + _IO_SEG_ROWS)
+            rows = self._store.take(self._perm[lo:hi]).astype(
+                np.float32, copy=False)
+            self._Xd = self._upd(self._Xd, jnp.asarray(rows), np.int32(lo))
+            lo = hi
+        self._filled = b
+
     def nested_step(self, state, b, capacity):
+        self._ensure_prefix(b)
         return nested_jit(self._Xd, state, b=b, rho=self._config.rho,
                           bounds=self._config.bounds, capacity=capacity,
                           use_shalf=self._config.use_shalf,

@@ -24,25 +24,59 @@ from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
                               PointState, full_mse)
 
 
+def _slice_shape(idx, shape):
+    """Concrete shape of a device's slice of a global array."""
+    return tuple((sl.stop if sl.stop is not None else dim)
+                 - (sl.start or 0) for sl, dim in zip(idx, shape))
+
+
+#: donated per-device-piece writer for `_ensure_prefix`. A shard_map'd
+#: update would be the obvious spelling, but on CPU its donation does
+#: not run in place — every segment write copies the whole (n, d)
+#: buffer, so filling the prefix holds two buffer generations resident
+#: (~2x the data in host RSS, measured). A plain jit over one device's
+#: piece DOES update in place, so the fill stays at one buffer plus a
+#: segment of churn.
+_piece_update = jax.jit(
+    lambda Xs, seg, at: jax.lax.dynamic_update_slice(Xs, seg, (at, 0)),
+    donate_argnums=0)
+
+
 class _MeshRun(EngineRun):
     _engine_name = "mesh"
 
     def __init__(self, X, config: FitConfig, mesh, X_val, init_C):
         from repro.data.pipeline import nested_shard_layout
+        from repro.data.store import (ChunkStore, StoredShardSource,
+                                      dataset_fingerprint)
 
         data_axes = config.data_axes
         n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
         self._config = config
         self._mesh = mesh
-        X = np.asarray(X)
-        N_real = X.shape[0]
-        self._dim = X.shape[1]
-        # the placement (shuffle + structural tail pads + round-robin
-        # interleave) is shared with data.pipeline.KMeansShardedSource;
-        # padded rows sit at the tail of every shard and b_local is
-        # capped below them, so they can never enter a nested prefix.
-        lay = nested_shard_layout(N_real, n_shards, seed=config.seed,
-                                  shuffle=config.shuffle)
+        if isinstance(X, ChunkStore):
+            # out-of-core: the layout's shuffle is the store's chunk-
+            # blocked permutation (sequential disk frontier); rows are
+            # fetched lazily up to the nested prefix (`_ensure_prefix`)
+            # instead of placed up front.
+            self._src = StoredShardSource(X, n_shards, seed=config.seed,
+                                          shuffle=config.shuffle)
+            N_real = X.n
+            self._dim = X.d
+            lay = self._src.layout
+            self.data_fingerprint = X.fingerprint()
+        else:
+            # the placement (shuffle + structural tail pads + round-robin
+            # interleave) is shared with data.pipeline.KMeansShardedSource;
+            # padded rows sit at the tail of every shard and b_local is
+            # capped below them, so they can never enter a nested prefix.
+            self._src = None
+            X = np.asarray(X)
+            N_real = X.shape[0]
+            self._dim = X.shape[1]
+            lay = nested_shard_layout(N_real, n_shards, seed=config.seed,
+                                      shuffle=config.shuffle)
+            self.data_fingerprint = dataset_fingerprint(X)
         self._layout = lay
         N = lay.n_storage
         self._N = N
@@ -65,14 +99,21 @@ class _MeshRun(EngineRun):
         self.orig_index = lay.orig_index()
         self._Xv = jnp.asarray(X_val) if X_val is not None else None
 
-        self._Xd = self._place_data(X)
+        if self._src is None:
+            self._Xd = self._place_data(X)
+            self._filled = self.b_max
+        else:
+            self._Xd = self._zeros_data()
+            self._filled = 0
         if init_C is not None:
             C0 = np.asarray(init_C, np.float32)
         else:
             # paper init: first k of the global shuffle. Indices past
             # N_real (k > N_real only) are structural pads == X[0].
             idx = lay.perm[:config.k]
-            C0 = X[np.where(idx < N_real, idx, 0)].astype(np.float32)
+            idx = np.where(idx < N_real, idx, 0)
+            C0 = (self._src.store.take(idx) if self._src is not None
+                  else X[idx]).astype(np.float32)
         self.state = self._place_state(self._host_init_state(C0))
 
     # -- layout hooks (overridden by _XLRun / _MultiHostRun) ----------------
@@ -120,6 +161,77 @@ class _MeshRun(EngineRun):
         return self._put_global(jnp.asarray(Xh.reshape(N, -1)),
                                 P(self._config.data_axes, None))
 
+    # -- out-of-core placement (store-backed fits) --------------------------
+    # The data buffer starts as zeros and is filled to the current
+    # nested prefix on demand: `nested_step` calls `_ensure_prefix(b)`,
+    # which fetches only storage rows [filled, b) of every shard — the
+    # "reuse old, append new" schedule as disk reads. Fetches run in
+    # fixed-size per-shard segments so host memory in flight stays
+    # bounded and the donated update jit compiles one full-segment
+    # executable plus a handful of ragged tails.
+
+    #: per-shard rows per fetch segment (host rows in flight per update
+    #: = _IO_SEG_ROWS * n_shards on single-process meshes)
+    _IO_SEG_ROWS = 8192
+
+    def _data_spec(self):
+        return P(self._config.data_axes, None)
+
+    def _zeros_data(self) -> jax.Array:
+        """The empty (n_storage, d) buffer, assembled from per-device
+        zero pieces — no process ever materialises the global shape."""
+        shape = (self._N, self._dim)
+        sh = NamedSharding(self._mesh, self._data_spec())
+        pieces = [
+            jax.device_put(np.zeros(_slice_shape(idx, shape), np.float32),
+                           dev)
+            for dev, idx in
+            sh.addressable_devices_indices_map(shape).items()]
+        return jax.make_array_from_single_device_arrays(shape, sh, pieces)
+
+    def _fetch_block(self, shards: np.ndarray, lo: int, hi: int):
+        """Storage rows [lo, hi) of the given shards, host-side float32
+        of shape (len(shards), hi - lo, d).
+
+        All requested shards come off the ChunkStore in ONE `block`
+        call. Under the round-robin layout every chunk holds rows of
+        every shard, so a per-shard loop would reload each covering
+        chunk once per shard (the segment can span more chunks than the
+        LRU keeps); fetched together, each chunk of the frontier is
+        read once — and the prefix-delta schedule then reads the store
+        about once per fit, not once per round.
+        """
+        return self._src.block(shards, lo, hi).astype(np.float32,
+                                                      copy=False)
+
+    def _ensure_prefix(self, b: int) -> None:
+        if self._src is None or b <= self._filled:
+            return
+        shape, sh = self._Xd.shape, self._Xd.sharding
+        rps = shape[0] // self.n_shards      # storage rows per shard
+        # shard id held by each addressable piece (this process's
+        # devices only on multihost; replicas repeat under the XL
+        # engine's model axis and each replica is written in place)
+        owned = [(s.index[0].start or 0) // rps
+                 for s in self._Xd.addressable_shards]
+        uniq, inv = np.unique(np.asarray(owned), return_inverse=True)
+        lo = self._filled
+        while lo < b:
+            hi = min(b, lo + self._IO_SEG_ROWS)
+            blk = self._fetch_block(uniq, lo, hi)
+            pieces = [
+                _piece_update(s.data,
+                              jax.device_put(blk[inv[j]], s.device),
+                              np.int32(lo))
+                for j, s in enumerate(self._Xd.addressable_shards)]
+            self._Xd = jax.make_array_from_single_device_arrays(
+                shape, sh, pieces)
+            lo = hi
+        self._filled = b
+        # warm the chunks of the NEXT doubling while this round computes
+        self._src.prefetch_positions(b * self.n_shards,
+                                     min(2 * b, self.b_max) * self.n_shards)
+
     def _host_init_state(self, C0: np.ndarray) -> KMeansState:
         """The paper's initial state, built host-side.
 
@@ -144,6 +256,7 @@ class _MeshRun(EngineRun):
 
     def nested_step(self, state, b, capacity):
         from repro.core.distributed import make_sharded_round
+        self._ensure_prefix(b)
         round_fn = make_sharded_round(
             self._mesh, self._config.data_axes, b_local=b,
             rho=self._config.rho, bounds=self._config.bounds,

@@ -81,6 +81,11 @@ class _MultiHostRun(_MeshRun):
             pieces.append(jax.device_put(jnp.asarray(Xl), dev))
         return jax.make_array_from_single_device_arrays(shape, sh, pieces)
 
+    # out-of-core `_ensure_prefix` needs no override: the base run
+    # derives shard ids from `_Xd.addressable_shards`, which on a
+    # multi-process mesh are exactly this process's devices — each
+    # process reads only its own shards' rows off its own store handle.
+
     def _fetch(self, arr):
         if not isinstance(arr, jax.Array) or arr.is_fully_addressable:
             return np.asarray(arr)

@@ -47,6 +47,7 @@ class _XLRun(_MeshRun):
 
     def nested_step(self, state, b, capacity):
         from repro.core.distributed_xl import make_xl_nested_round
+        self._ensure_prefix(b)   # out-of-core: no-op on in-memory fits
         round_fn = make_xl_nested_round(
             self._mesh, self._config.data_axes,
             model_axis=self._config.model_axis, b_local=b,

@@ -76,19 +76,49 @@ class NestedKMeans:
 
     # -- fitting ------------------------------------------------------------
 
-    def fit(self, X, *, X_val=None,
+    def fit(self, X=None, *, X_val=None,
             init_C: Optional[np.ndarray] = None,
             resume: bool = False) -> "NestedKMeans":
         """Run the configured algorithm to convergence / budget.
+
+        ``X`` may be an in-memory array, an on-disk chunk-store path (or
+        open `ChunkStore`) for an out-of-core fit, or omitted entirely
+        when ``config.data_source`` names the store. Store-backed fits
+        stream the nested prefix from disk and are bit-identical to the
+        in-memory fit over the same row sequence (nested family only —
+        mb/lloyd rescan the full dataset every round).
 
         ``resume=True`` (requires ``config.checkpoint``) restores the
         latest in-loop checkpoint from ``checkpoint_dir`` and continues
         the fit from there — bit-identically on the same engine, and
         elastically across a shard-count (or local<->mesh) change. With
-        no checkpoint on disk yet the fit simply starts fresh.
+        no checkpoint on disk yet the fit simply starts fresh. Resuming
+        against a different dataset than the checkpoint's is a loud
+        error (the manifest carries a dataset fingerprint).
         """
+        from pathlib import Path
+        from repro.data.store import ChunkStore
         with self._lock:
-            cfg = self.config.resolve(int(np.asarray(X).shape[0]))
+            if X is None:
+                if self.config.data_source is None:
+                    raise ValueError(
+                        "fit() needs data: pass X (array or store "
+                        "path), or set config.data_source")
+                X = self.config.data_source
+            if isinstance(X, (str, Path)):
+                X = ChunkStore(X)
+            if isinstance(X, ChunkStore):
+                n = X.n
+            else:
+                n = int(np.asarray(X).shape[0])
+            cfg = self.config.resolve(n)
+            if isinstance(X, ChunkStore) and cfg.algorithm not in (
+                    "tb", "gb"):
+                raise ValueError(
+                    f"out-of-core fits stream the nested prefix; "
+                    f"algorithm={self.config.algorithm!r} needs the "
+                    f"full dataset in memory every round (pass X as an "
+                    f"array)")
             if resume and cfg.checkpoint is None:
                 raise ValueError(
                     "fit(resume=True) requires config.checkpoint")

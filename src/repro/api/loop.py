@@ -176,6 +176,21 @@ def run_loop(run: EngineRun, config: FitConfig, *,
                 f"checkpoint step {step} has no loop metadata; it was "
                 f"not written by run_loop")
         emeta, loop = extra["engine"], extra["loop"]
+        # dataset identity gate: a resume against a DIFFERENT dataset
+        # would restore per-point state that describes rows the new data
+        # does not have — silently producing garbage labels. Fingerprints
+        # are JSON-safe dicts, so old checkpoints (no "data" key) skip
+        # the check rather than break.
+        saved_fp = extra.get("data")
+        fp = getattr(run, "data_fingerprint", None)
+        if saved_fp is not None and fp is not None and saved_fp != fp:
+            diff = sorted(k for k in set(saved_fp) | set(fp)
+                          if saved_fp.get(k) != fp.get(k))
+            raise ValueError(
+                f"checkpoint step {step} was written for a different "
+                f"dataset (fingerprint differs on {diff}: checkpoint "
+                f"{saved_fp} vs this fit {fp}); resuming would silently "
+                f"mislabel the new data — refusing")
         state = run.restore(rstore, step, emeta)
         telemetry = [Telemetry.from_dict(r) for r in extra["telemetry"]]
         t_work = float(loop["t_work"])
@@ -212,6 +227,7 @@ def run_loop(run: EngineRun, config: FitConfig, *,
         tree, emeta = run.capture(state)
         extra = {
             "config": config.to_dict(),
+            "data": run.data_fingerprint,
             "engine": emeta,
             "loop": {"rounds_done": len(telemetry),
                      "b_global": b * run.n_shards, "capacity": capacity,

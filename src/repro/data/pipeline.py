@@ -82,7 +82,8 @@ class ShardLayout:
 
 
 def nested_shard_layout(n_real: int, n_shards: int, *, seed: int = 0,
-                        shuffle: bool = True) -> ShardLayout:
+                        shuffle: bool = True,
+                        perm: Optional[np.ndarray] = None) -> ShardLayout:
     """The mesh engine's data placement, as pure host-side index math.
 
     Shuffle positions are dealt round-robin: shard ``s`` holds positions
@@ -92,15 +93,28 @@ def nested_shard_layout(n_real: int, n_shards: int, *, seed: int = 0,
     the shuffle), hence the LAST storage row of the high shards; every
     shard's real rows stay prefix-contiguous and are counted by
     ``n_valid``.
+
+    ``perm`` overrides the shuffle with a caller-supplied permutation of
+    the ``n_real`` rows (the identity pad tail is appended here). The
+    out-of-core `StoredShardSource` uses this to install its
+    chunk-blocked shuffle while inheriting all pad/interleave semantics.
     """
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     pad = -n_real % n_shards
     n_storage = n_real + pad
-    rng = np.random.default_rng(seed)
-    perm = (np.concatenate([rng.permutation(n_real),
-                            np.arange(n_real, n_storage)])
-            if shuffle else np.arange(n_storage))
+    if perm is not None:
+        perm = np.asarray(perm)
+        if perm.shape != (n_real,):
+            raise ValueError(
+                f"perm must permute the {n_real} real rows, got shape "
+                f"{perm.shape}")
+        perm = np.concatenate([perm, np.arange(n_real, n_storage)])
+    else:
+        rng = np.random.default_rng(seed)
+        perm = (np.concatenate([rng.permutation(n_real),
+                                np.arange(n_real, n_storage)])
+                if shuffle else np.arange(n_storage))
     pos = np.arange(n_storage).reshape(n_storage // n_shards, n_shards) \
         .T.ravel()
     n_valid = np.array([len(range(s, n_real, n_shards))
@@ -123,10 +137,12 @@ class KMeansShardedSource:
     X: np.ndarray
     n_shards: int
     seed: int = 0
+    perm_override: Optional[np.ndarray] = None
 
     def __post_init__(self):
         n = self.X.shape[0]
-        self.layout = nested_shard_layout(n, self.n_shards, seed=self.seed)
+        self.layout = nested_shard_layout(n, self.n_shards, seed=self.seed,
+                                          perm=self.perm_override)
         pad = self.layout.n_storage - n
         self._Xp = (np.concatenate([self.X, np.repeat(self.X[:1], pad,
                                                       axis=0)])

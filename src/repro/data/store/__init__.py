@@ -1,0 +1,18 @@
+"""`repro.data.store` — the out-of-core chunked data plane.
+
+A dataset too large for host RAM lives on disk as fixed-size row chunks
+plus a JSON index (`writer.StoreWriter`); `reader.ChunkStore` memory-maps
+it back with an LRU chunk cache, an optional background prefetcher and
+read metrics; `source.StoredShardSource` composes the store with the
+engines' `nested_shard_layout` so each process fetches exactly the
+chunks covering its shards' next prefix extension per round — the
+paper's "reuse old, append new" schedule turned into an append-only
+disk-read frontier.
+"""
+from repro.data.store.reader import ChunkStore, StoreMetrics
+from repro.data.store.source import (StoredShardSource, dataset_fingerprint,
+                                     store_permutation)
+from repro.data.store.writer import StoreWriter, write_store
+
+__all__ = ["ChunkStore", "StoreMetrics", "StoreWriter", "StoredShardSource",
+           "dataset_fingerprint", "store_permutation", "write_store"]

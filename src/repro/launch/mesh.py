@@ -11,28 +11,10 @@ from typing import Optional, Sequence
 
 import jax
 
-
-def device_count_flag(n: int) -> str:
-    """The complete XLA flag forcing ``n`` host-platform devices."""
-    return f"--xla_force_host_platform_device_count={n}"
-
-
-def require_devices(n: int, *, local: bool = False) -> None:
-    """Fail with the full remedy if fewer than ``n`` devices exist.
-
-    ``local=True`` counts only THIS process's devices (the multihost
-    initialiser validates per-process capacity; mesh builders validate
-    the global total). Shared by `make_host_mesh` and
-    `initialize_multihost` so the two error messages cannot drift.
-    """
-    have = len(jax.local_devices() if local else jax.devices())
-    if have < n:
-        scope = "process-local " if local else ""
-        raise RuntimeError(
-            f"need {n} {scope}devices, have {have}; on a CPU host set "
-            f"XLA_FLAGS={device_count_flag(n)} in the environment "
-            f"BEFORE jax initialises (or run on a host with enough "
-            f"accelerators)")
+# the flag construction and device validation live in repro.util.env
+# (shared with benchmark/smoke subprocess children); re-exported here
+# because this module has always been their import point
+from repro.util.env import device_count_flag, require_devices  # noqa: F401
 
 
 def _make_mesh(shape, axes):

@@ -28,12 +28,19 @@ from repro.serve import ClusterService, IngestQueue
 from repro.train import step as tstep
 
 
-def build_codebook(E: np.ndarray, k: int, seed: int, *,
+def build_codebook(E, k: int, seed: int, *,
                    checkpoint_dir: str | None = None,
                    save_every: int = 20,
                    resume: bool = False,
                    backend: str = "local") -> NestedKMeans:
-    """Fit the embedding-table codebook through the unified api.
+    """Fit the embedding codebook through the unified api.
+
+    ``E`` is the data to cluster: an in-memory ``(n, d)`` array (the
+    embedding table), or an on-disk `repro.data.store` chunk store —
+    a directory path or an open `ChunkStore` — for embedding corpora
+    bigger than host memory. Store-backed fits stream the nested prefix
+    from disk on any backend; everything downstream (checkpointing,
+    resume, the local hand-off) is identical.
 
     With ``checkpoint_dir`` the fit checkpoints its full loop state
     every ``save_every`` rounds and (``resume=True``) continues a killed
@@ -56,6 +63,12 @@ def build_codebook(E: np.ndarray, k: int, seed: int, *,
         raise ValueError(
             "--resume needs --checkpoint-dir: there is nowhere to "
             "resume from without a checkpoint store")
+    from pathlib import Path
+
+    from repro.data.store import ChunkStore
+    if isinstance(E, (str, Path)):
+        E = ChunkStore(E)
+    n = E.n if isinstance(E, ChunkStore) else E.shape[0]
     ck = (CheckpointConfig(checkpoint_dir=checkpoint_dir,
                            save_every=save_every)
           if checkpoint_dir else None)
@@ -73,7 +86,7 @@ def build_codebook(E: np.ndarray, k: int, seed: int, *,
                   f"(equivalent to backend='mesh')")
         mesh = jax.make_mesh((n_dev // m, m), ("data", "model"))
     cfg = FitConfig(k=k, algorithm="tb", rho=float("inf"),
-                    b0=min(2 * k, E.shape[0]), bounds="hamerly2",
+                    b0=min(2 * k, n), bounds="hamerly2",
                     max_rounds=200, seed=seed, checkpoint=ck,
                     backend=backend, data_axes=("data",),
                     model_axis="model")
@@ -109,6 +122,11 @@ def main():
     ap.add_argument("--codebook", type=int, default=0, metavar="K",
                     help="maintain a K-cell VQ codebook over the "
                          "embedding table via repro.serve")
+    ap.add_argument("--codebook-store", default=None, metavar="DIR",
+                    help="fit the codebook from this on-disk "
+                         "repro.data.store chunk store instead of the "
+                         "embedding table (its d must equal the model's "
+                         "embedding dim; the fit streams from disk)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="checkpoint the codebook fit in-loop here")
     ap.add_argument("--save-every", type=int, default=20,
@@ -137,12 +155,15 @@ def main():
     if args.codebook:
         E = np.asarray(params["embed"], np.float32)
         t0 = time.time()
-        codebook = build_codebook(E, args.codebook, args.seed,
+        source = args.codebook_store or E
+        codebook = build_codebook(source, args.codebook, args.seed,
                                   checkpoint_dir=args.checkpoint_dir,
                                   save_every=args.save_every,
                                   resume=args.resume,
                                   backend=args.codebook_backend)
-        print(f"codebook: k={args.codebook} over {E.shape} embeddings "
+        what = (f"store {args.codebook_store}" if args.codebook_store
+                else f"{E.shape} embeddings")
+        print(f"codebook: k={args.codebook} over {what} "
               f"in {time.time() - t0:.2f}s "
               f"(rounds={codebook.n_rounds_}, "
               f"converged={codebook.converged_})")

@@ -54,6 +54,12 @@ def main():
     ap.add_argument("--codebook", type=int, default=0, metavar="K",
                     help="cluster the trained embedding table into K "
                          "cells via repro.api and report VQ stats")
+    ap.add_argument("--codebook-store", default=None, metavar="DIR",
+                    help="fit the codebook from this on-disk "
+                         "repro.data.store chunk store instead of the "
+                         "embedding table (its d must equal the "
+                         "model's embedding dim); the VQ probe still "
+                         "reports the table's occupancy under it")
     ap.add_argument("--codebook-backend", default="local",
                     choices=("local", "mesh", "xl", "multihost"),
                     help="engine for the codebook fit: local | mesh "
@@ -131,8 +137,8 @@ def main():
         # --resume here is opportunistic ("continue if a checkpoint
         # exists"), so only request it when there is a store to resume
         # from — build_codebook errors loudly on resume without one
-        km = build_codebook(E, args.codebook, args.seed,
-                            checkpoint_dir=ckpt_dir,
+        km = build_codebook(args.codebook_store or E, args.codebook,
+                            args.seed, checkpoint_dir=ckpt_dir,
                             resume=args.resume and ckpt_dir is not None,
                             backend=args.codebook_backend)
         sizes = np.bincount(km.predict(E), minlength=args.codebook)

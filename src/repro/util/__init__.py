@@ -1,0 +1,2 @@
+"""Cross-cutting helpers shared by launchers, benchmarks and smokes."""
+from repro.util import env  # noqa: F401

@@ -1,0 +1,349 @@
+"""The out-of-core data plane: chunked store, stored shard source, and
+store-backed fits.
+
+The fast tests cover the format round-trip (ragged tail, dtypes, odd
+append sizes), crc corruption detection, the LRU read accounting, the
+blocked permutation's chunk-frontier property, StoredShardSource ==
+KMeansShardedSource row-for-row at ``N % n_shards != 0``, the local
+engine's stored-fit bit-parity, and the checkpoint dataset-fingerprint
+gate. The slow test runs scripts/smoke_store.py, which repeats the
+parity on mesh/xl/multihost and on a REAL 2-process cluster.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data.store import (ChunkStore, StoreWriter, StoredShardSource,
+                              dataset_fingerprint, store_permutation,
+                              write_store)
+
+
+def _rows(n, d=6, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# format round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,chunk_rows", [(0, 8), (5, 8), (8, 8),
+                                          (17, 8), (1000, 64), (257, 256)])
+def test_roundtrip(tmp_path, n, chunk_rows):
+    X = _rows(n)
+    st_dir = tmp_path / "st"
+    write_store(st_dir, X, chunk_rows=chunk_rows)
+    with ChunkStore(st_dir, verify=True) as st:
+        assert (st.n, st.d) == X.shape
+        assert st.n_chunks == -(-n // chunk_rows)
+        np.testing.assert_array_equal(st.rows(0, n), X)
+        if n:
+            idx = np.random.default_rng(1).integers(0, n, 3 * n)
+            np.testing.assert_array_equal(st.take(idx), X[idx])
+            mid = st.rows(n // 3, 2 * n // 3)
+            np.testing.assert_array_equal(mid, X[n // 3:2 * n // 3])
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64", "float16"])
+def test_roundtrip_dtypes(tmp_path, dtype):
+    X = _rows(100, dtype=np.dtype(dtype))
+    write_store(tmp_path / "st", X, chunk_rows=32)
+    with ChunkStore(tmp_path / "st") as st:
+        assert st.dtype == np.dtype(dtype)
+        np.testing.assert_array_equal(st.rows(0, 100), X)
+
+
+def test_writer_odd_appends_match_write_store(tmp_path):
+    """Appending in arbitrary pieces produces the identical store."""
+    X = _rows(531)
+    write_store(tmp_path / "a", X, chunk_rows=100)
+    with StoreWriter(tmp_path / "b", d=X.shape[1],
+                     chunk_rows=100) as w:
+        at = 0
+        for size in (1, 7, 99, 100, 101, 223):
+            w.append(X[at:at + size])
+            at += size
+        w.append(X[at:])
+    a, b = ChunkStore(tmp_path / "a"), ChunkStore(tmp_path / "b")
+    assert a.checksum == b.checksum
+    np.testing.assert_array_equal(a.rows(0, 531), b.rows(0, 531))
+
+
+def test_writer_abort_leaves_no_index(tmp_path):
+    """An exception mid-write must not publish a readable (torn) store."""
+    try:
+        with StoreWriter(tmp_path / "st", d=4, chunk_rows=8) as w:
+            w.append(_rows(20, d=4))
+            raise RuntimeError("interrupted")
+    except RuntimeError:
+        pass
+    with pytest.raises(FileNotFoundError, match="not a chunk store"):
+        ChunkStore(tmp_path / "st")
+
+
+def test_corruption_detected(tmp_path):
+    X = _rows(64)
+    write_store(tmp_path / "st", X, chunk_rows=16)
+    with open(tmp_path / "st" / "data.bin", "r+b") as f:
+        f.seek(16 * X.shape[1] * 4 + 5)      # a byte inside chunk 1
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    st = ChunkStore(tmp_path / "st", verify=True)
+    st.chunk(0)                              # untouched chunk still reads
+    with pytest.raises(IOError, match="corrupt"):
+        st.chunk(1)
+    # without verify the flipped byte goes unnoticed (documented trade)
+    ChunkStore(tmp_path / "st").chunk(1)
+
+
+def test_lru_and_metrics(tmp_path):
+    X = _rows(160)
+    write_store(tmp_path / "st", X, chunk_rows=16)    # 10 chunks
+    st = ChunkStore(tmp_path / "st", cache_chunks=4)
+    st.rows(0, 160)                          # sequential: 10 cold loads
+    m = st.metrics
+    assert m.chunk_loads == 10 and m.cache_hits == 0
+    assert m.bytes_read == X.nbytes and m.rows_served == 160
+    st.take(np.arange(160 - 16 * 4, 160))    # the 4 cached tail chunks
+    assert st.metrics.chunk_loads == 10      # all hits
+    assert st.metrics.cache_hits == 4
+    st.chunk(0)                              # evicted long ago: a reload
+    assert st.metrics.chunk_loads == 11
+
+
+def test_prefetch_warms_cache(tmp_path):
+    X = _rows(128)
+    write_store(tmp_path / "st", X, chunk_rows=16)
+    with ChunkStore(tmp_path / "st", prefetch_depth=4) as st:
+        assert st.prefetch([0, 1]) == 2
+        deadline = 200
+        while st.metrics.prefetched < 2 and deadline:
+            import time
+            time.sleep(0.01)
+            deadline -= 1
+        assert st.metrics.prefetched == 2
+        st.chunk(0), st.chunk(1)
+        assert st.metrics.cache_hits == 2    # served without a load
+    assert ChunkStore(tmp_path / "st").prefetch([0]) == 0  # no thread
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: the round-trip holds for arbitrary shapes and reads
+# ---------------------------------------------------------------------------
+
+try:        # optional dev dependency: only this one test needs it
+    from hypothesis import given, settings, strategies as st_
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st_.data())
+    def test_roundtrip_property(tmp_path_factory, data):
+        n = data.draw(st_.integers(0, 400))
+        d = data.draw(st_.integers(1, 12))
+        chunk_rows = data.draw(st_.integers(1, 64))
+        X = _rows(n, d=d, seed=data.draw(st_.integers(0, 999)))
+        path = tmp_path_factory.mktemp("hyp") / "st"
+        write_store(path, X, chunk_rows=chunk_rows)
+        with ChunkStore(path, verify=True,
+                        cache_chunks=data.draw(st_.integers(1, 6))) as st:
+            np.testing.assert_array_equal(st.rows(0, n), X)
+            if n:
+                lo = data.draw(st_.integers(0, n))
+                hi = data.draw(st_.integers(lo, n))
+                np.testing.assert_array_equal(st.rows(lo, hi), X[lo:hi])
+                idx = np.asarray(data.draw(st_.lists(
+                    st_.integers(0, n - 1), max_size=50)), dtype=np.int64)
+                np.testing.assert_array_equal(st.take(idx), X[idx])
+            perm = store_permutation(n, chunk_rows,
+                                     data.draw(st_.integers(0, 99)))
+            assert sorted(perm) == list(range(n))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_roundtrip_property():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the blocked permutation and the stored shard source
+# ---------------------------------------------------------------------------
+
+def test_store_permutation_chunk_frontier():
+    """Every prefix of the blocked shuffle is a run of whole chunks plus
+    one partial frontier chunk — the property that bounds disk reads."""
+    n, chunk_rows = 1000, 64
+    perm = store_permutation(n, chunk_rows, seed=3)
+    assert sorted(perm) == list(range(n))
+    assert not np.array_equal(perm, np.arange(n))
+    for b in (1, 64, 100, 500, 999):
+        touched = np.unique(perm[:b] // chunk_rows)
+        assert len(touched) <= -(-b // chunk_rows) + 1
+    np.testing.assert_array_equal(
+        store_permutation(n, chunk_rows, seed=3, shuffle=False),
+        np.arange(n))
+
+
+def test_stored_source_matches_in_memory(tmp_path):
+    """StoredShardSource == KMeansShardedSource(perm_override) row for
+    row, with N % n_shards != 0 so tail pads are live."""
+    from repro.data.pipeline import KMeansShardedSource
+    N, n_shards, chunk_rows = 4001, 4, 256
+    X = _rows(N, d=8)
+    write_store(tmp_path / "st", X, chunk_rows=chunk_rows)
+    src = StoredShardSource(tmp_path / "st", n_shards, seed=1)
+    perm = store_permutation(N, chunk_rows, seed=1)
+    ref = KMeansShardedSource(X, n_shards, seed=1, perm_override=perm)
+    assert src.layout.rows_per_shard == ref.layout.rows_per_shard
+    for s in range(n_shards):
+        assert src.n_valid(s) == ref.n_valid(s)
+        np.testing.assert_array_equal(src.shard(s), ref.shard(s))
+        np.testing.assert_array_equal(src.shard_valid(s),
+                                      ref.shard_valid(s))
+    np.testing.assert_array_equal(src.global_prefix(1000),
+                                  ref.global_prefix(1000))
+    # block() is the streaming window: vertical slices of shard()
+    blk = src.block(np.arange(n_shards), 10, 50)
+    for s in range(n_shards):
+        np.testing.assert_array_equal(blk[s], ref.shard(s)[10:50])
+    src.close()
+
+
+def test_fingerprint_identity(tmp_path):
+    X = _rows(300)
+    write_store(tmp_path / "a", X, chunk_rows=64)
+    write_store(tmp_path / "b", X, chunk_rows=64)
+    write_store(tmp_path / "c", _rows(300, seed=9), chunk_rows=64)
+    fa = dataset_fingerprint(ChunkStore(tmp_path / "a"))
+    assert fa == dataset_fingerprint(ChunkStore(tmp_path / "b"))
+    assert fa != dataset_fingerprint(ChunkStore(tmp_path / "c"))
+    assert fa["kind"] == "store"
+    ga = dataset_fingerprint(X)
+    assert ga["kind"] == "array"
+    assert ga == dataset_fingerprint(X.copy())
+    assert ga != dataset_fingerprint(_rows(300, seed=9))
+
+
+# ---------------------------------------------------------------------------
+# store-backed fits (local engine; sharded engines in the slow smoke)
+# ---------------------------------------------------------------------------
+
+def _fit_cfg(**kw):
+    from repro import api
+    kw.setdefault("k", 4)
+    kw.setdefault("b0", 128)
+    kw.setdefault("max_rounds", 40)
+    kw.setdefault("seed", 2)
+    return api.FitConfig(**kw)
+
+
+def test_local_stored_fit_bit_parity(tmp_path):
+    from repro import api
+    N, chunk_rows = 1003, 128
+    X = _rows(N, d=8, seed=4)
+    write_store(tmp_path / "st", X, chunk_rows=chunk_rows)
+    st = ChunkStore(tmp_path / "st")
+    out_s = api.fit(st, _fit_cfg())
+    perm = store_permutation(N, chunk_rows, seed=2)
+    out_m = api.fit(X[perm], _fit_cfg(shuffle=False))
+    np.testing.assert_array_equal(out_s.C, out_m.C)
+    np.testing.assert_array_equal(out_s.labels[perm], out_m.labels)
+    ta = [r.to_dict() for r in out_s.telemetry]
+    tb = [r.to_dict() for r in out_m.telemetry]
+    for r in ta + tb:
+        r.pop("t")                   # wall-clock differs by definition
+    assert ta == tb
+    # ... and the frontier property: the fit read the store about once
+    assert st.metrics.bytes_read <= 1.6 * X.nbytes
+
+
+def test_fit_from_path_and_data_source(tmp_path):
+    from repro import api
+    X = _rows(600, d=8)
+    write_store(tmp_path / "st", X, chunk_rows=128)
+    out_a = api.fit(str(tmp_path / "st"), _fit_cfg())
+    km = api.NestedKMeans(_fit_cfg(data_source=str(tmp_path / "st")))
+    km.fit()                         # no X: config names the store
+    np.testing.assert_array_equal(out_a.C, km.cluster_centers_)
+    with pytest.raises(ValueError, match="needs data"):
+        api.NestedKMeans(_fit_cfg()).fit()
+
+
+def test_store_rejects_non_nested_algorithms(tmp_path):
+    from repro import api
+    write_store(tmp_path / "st", _rows(600, d=8), chunk_rows=128)
+    with pytest.raises(ValueError, match="data_source"):
+        _fit_cfg(algorithm="mb", data_source=str(tmp_path / "st"))
+    with pytest.raises(ValueError, match="out-of-core"):
+        api.fit(str(tmp_path / "st"), _fit_cfg(algorithm="lloyd"))
+
+
+def test_resume_fingerprint_gate(tmp_path):
+    """Resuming a checkpoint against a different dataset fails loudly."""
+    import dataclasses
+
+    from repro import api
+    X = _rows(600, d=8, seed=4)
+    write_store(tmp_path / "st", X, chunk_rows=128)
+    write_store(tmp_path / "other", _rows(600, d=8, seed=5),
+                chunk_rows=128)
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path / "ck"),
+                              save_every=2)
+    cfg = _fit_cfg(checkpoint=ck)
+    api.fit(ChunkStore(tmp_path / "st"),
+            dataclasses.replace(cfg, max_rounds=5))
+    with pytest.raises(ValueError, match="different dataset"):
+        api.NestedKMeans(cfg).fit(ChunkStore(tmp_path / "other"),
+                                  resume=True)
+    # same store: resumes cleanly, and in-memory arrays gate too
+    api.NestedKMeans(cfg).fit(ChunkStore(tmp_path / "st"), resume=True)
+    ck2 = api.CheckpointConfig(checkpoint_dir=str(tmp_path / "ck2"),
+                               save_every=2)
+    cfg2 = _fit_cfg(checkpoint=ck2)
+    api.fit(X, dataclasses.replace(cfg2, max_rounds=5))
+    with pytest.raises(ValueError, match="different dataset"):
+        api.NestedKMeans(cfg2).fit(_rows(600, d=8, seed=5), resume=True)
+
+
+def test_writer_cli_synthetic(tmp_path):
+    from repro.data.store import writer
+    out = str(tmp_path / "st")
+    writer.main([out, "--synthetic", "blobs", "--n", "500", "--dim",
+                 "8", "--classes", "4", "--chunk-rows", "128"])
+    with ChunkStore(out, verify=True) as st:
+        assert (st.n, st.d) == (500, 8)
+        assert st.rows(0, 500).std() > 0
+
+
+# ---------------------------------------------------------------------------
+# the full stack (mesh / xl / multihost / 2-process cluster)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_store_smoke_subprocess():
+    """scripts/smoke_store.py: stored-fit bit-parity on every backend,
+    kill-and-resume from disk, and the real 2-process streamed fit."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "scripts/smoke_store.py"],
+                       env=env, capture_output=True, text=True,
+                       timeout=900, cwd=repo)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for marker in ("local stored fit: bit-identical",
+                   "mesh stored fit: bit-identical",
+                   "xl stored fit: bit-identical",
+                   "multihost(1 process) stored == mesh stored",
+                   "read amplification",
+                   "stored kill-and-resume: bit-identical",
+                   "resume against a different store: refused",
+                   "chunk corruption: crc verification",
+                   "2-process stored cluster: identical traces",
+                   "kill-one-process resume from the store",
+                   "store smoke OK"):
+        assert marker in r.stdout, (marker, r.stdout)
