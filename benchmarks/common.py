@@ -3,9 +3,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, List
-
-import numpy as np
+from typing import List
 
 from repro.data import synthetic
 

@@ -11,8 +11,6 @@ import json
 import math
 from pathlib import Path
 
-import numpy as np
-
 from benchmarks import common
 from repro import api
 

@@ -10,9 +10,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import jax
-import numpy as np
-
 from benchmarks import common
 from repro import api
 

@@ -18,7 +18,6 @@ Artifact: artifacts/bench/xl_engine.json
 from __future__ import annotations
 
 import json
-import math
 import os
 import subprocess
 import sys

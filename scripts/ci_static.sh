@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Static + invariant gate: ruff (when installed) and the four JAX-aware
+# checkers in src/repro/analysis/:
+#
+#   lint      replicated-control-flow AST lint over the loop + engines
+#   hostsync  device->host sync audit of real fits (transfer_guard +
+#             array-conversion interceptor inside LoopAudit scopes)
+#   retrace   actual jit trace count vs the analytic pow2 bucket lattice
+#   donation  donate_argnums jits must alias, not copy (memory_analysis)
+#
+# Then `--selftest` replants each checker's historical bug class
+# (PR 2 device-scalar branch, PR 6 copying shard_map donation, the
+# rho-keyed retrace) and fails if any checker has lost its teeth.
+#
+# Runtime auditors run real multi-device fits: ~2-3 minutes total.
+# `ci_static.sh lint` runs just the AST lint (sub-second, no jax).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+# ruff is not baked into every container image; the config (ruff.toml)
+# is checked in so any environment that has it enforces the same rules.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests scripts benchmarks
+else
+    echo "[ruff] not installed — skipping (config: ruff.toml)"
+fi
+
+if [ "$#" -gt 0 ]; then
+    python -m repro.analysis "$@"
+    exit 0
+fi
+
+python -m repro.analysis lint
+python -m repro.analysis hostsync retrace donation --backends local,mesh,xl
+python -m repro.analysis all --selftest

@@ -20,6 +20,11 @@ if ! python -c "import repro" 2>/dev/null; then
     exit 1
 fi
 
+# static gate first: the AST lint is sub-second and catches the
+# replicated-control-flow regressions before any test spends minutes.
+# (The runtime auditors + selftests run in the unscoped block below.)
+bash scripts/ci_static.sh lint
+
 python -m pytest -x -q -m "not slow" "$@"
 
 # kill-and-resume must stay green in the inner loop too — but only on
@@ -49,4 +54,8 @@ if [ "$#" -eq 0 ]; then
     # the dataset-fingerprint resume gate, and a 2-process cluster
     # streaming off one store directory).
     timeout 1000 python -m pytest -x -q tests/test_store.py
+    # full static + invariant gate: ruff (if installed), the runtime
+    # auditors (hostsync / retrace / donation) across backends, and the
+    # planted-bug selftests proving every checker still has teeth.
+    timeout 900 bash scripts/ci_static.sh
 fi

@@ -1,0 +1,47 @@
+"""`repro.analysis` — invariant checkers for the control plane.
+
+The repo's correctness story rests on invariants that ordinary unit
+tests cannot see: the host loop's control flow must be bit-identical on
+every process (PR 5), the steady-state loop must not sync device state
+to the host outside the sanctioned crossings, the jit cache must hold
+exactly one executable per power-of-two schedule bucket, and every
+donated buffer in the engine data path must actually be aliased by the
+compiled executable.  Each of these has been violated by a real
+historical bug class in this codebase; this package turns each one into
+a mechanical check:
+
+  lint       static AST pass over `repro.api.loop` and the engines —
+             flags per-round branches, host coercions and RNG draws
+             that do not derive from the psum-reduced `HostRoundInfo`
+             scalars, the resolved `FitConfig`, or the sanctioned
+             `run` primitives (`replicated_lint`).
+  hostsync   runs a small fit per backend under a device->host
+             interceptor (plus `jax.transfer_guard`) scoped by
+             `repro.api.loop.LoopAudit` — any sync outside the
+             sanctioned scopes is a violation with the caller's
+             file:line (`hostsync`).
+  retrace    runs a full growth schedule and counts ACTUAL jit traces
+             via `repro.util.tracecount` — every (b, capacity) bucket
+             must trace at most once and sit on the pow2 lattice
+             (`retrace`).
+  donation   proves every `donate_argnums` jit in the engine data path
+             aliases its donated operand in the compiled executable —
+             via `memory_analysis()` and buffer-pointer identity
+             (`donation`).
+
+Run them all: ``python -m repro.analysis all`` (see `__main__`).  Each
+checker also has a ``selftest`` that replants the historical bug class
+(device-scalar branch, rho-keyed retrace, copying donation) and asserts
+the checker still catches it.  Sanctioned exceptions live in
+`allowlist.txt` next to this file — every entry carries a reason and
+stale entries fail the lint, so the exception surface stays auditable.
+
+Everything here is import-light: importing the package or the lint
+touches no jax; the runtime auditors import jax lazily so the CLI can
+force a host device count first (`repro.util.env`).
+"""
+from __future__ import annotations
+
+from repro.analysis.report import Violation
+
+__all__ = ["Violation"]

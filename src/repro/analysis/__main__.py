@@ -1,0 +1,130 @@
+"""``python -m repro.analysis`` — run the invariant checkers.
+
+Usage::
+
+    python -m repro.analysis lint                  # AST lint (no jax)
+    python -m repro.analysis hostsync retrace      # runtime auditors
+    python -m repro.analysis all                   # everything
+    python -m repro.analysis all --selftest        # planted-bug teeth check
+    python -m repro.analysis hostsync --backends local,mesh,xl
+
+Exit status 0 iff every requested check is clean (or, with
+``--selftest``, iff every checker still flags its planted historical
+bug class).  The runtime checkers need multiple devices for the mesh/xl
+backends, so the host device count is forced BEFORE jax initialises —
+which is why this module must stay the process entry point and must not
+import jax at module scope.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+CHECKS = ("lint", "hostsync", "retrace", "donation")
+RUNTIME_CHECKS = {"hostsync", "retrace", "donation"}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="invariant checkers: replicated-control-flow lint, "
+                    "host-sync / retrace / donation auditors")
+    p.add_argument("checks", nargs="*", default=["all"],
+                   choices=list(CHECKS) + ["all"],
+                   help="which checkers to run (default: all)")
+    p.add_argument("--backends", default="local,mesh,xl",
+                   help="comma-separated backends for the runtime "
+                        "auditors (default: local,mesh,xl)")
+    p.add_argument("--devices", type=int, default=4,
+                   help="host device count to force for multi-device "
+                        "backends (default: 4)")
+    p.add_argument("--allowlist", default=None,
+                   help="alternate allowlist file for the lint")
+    p.add_argument("--selftest", action="store_true",
+                   help="instead of auditing the tree, replant each "
+                        "checker's historical bug class and FAIL if it "
+                        "is no longer flagged")
+    args = p.parse_args(argv)
+
+    checks = list(CHECKS) if "all" in args.checks else \
+        [c for c in CHECKS if c in args.checks]
+    backends = [b.strip() for b in args.backends.split(",") if b.strip()]
+
+    if set(checks) & RUNTIME_CHECKS:
+        # must precede any jax import in this process
+        from repro.util.env import force_host_device_count
+        force_host_device_count(args.devices)
+
+    failures = 0
+    for check in checks:
+        violations = _run_check(check, args, backends)
+        if args.selftest:
+            # a selftest SUCCEEDS by producing violations (the planted
+            # bug was caught); _run_check raises when teeth are lost
+            print(f"[{check}] selftest: planted bug class flagged "
+                  f"({len(violations)} finding(s))")
+            for v in violations:
+                print(f"    {v}")
+            continue
+        if violations:
+            failures += len(violations)
+            print(f"[{check}] FAIL — {len(violations)} violation(s):")
+            for v in sorted(violations,
+                            key=lambda v: (v.file, v.line, v.kind)):
+                print(f"    {v}")
+        else:
+            scope = (f" (backends: {', '.join(backends)})"
+                     if check in ("hostsync", "retrace") else "")
+            print(f"[{check}] OK{scope}")
+    if failures:
+        print(f"\n{failures} violation(s); see "
+              f"src/repro/analysis/allowlist.txt for how sanctioned "
+              f"exceptions are recorded")
+        return 1
+    return 0
+
+
+def _run_check(check: str, args, backends: List[str]):
+    if check == "lint":
+        from repro.analysis import replicated_lint
+        if args.selftest:
+            from repro.analysis.report import repo_root
+            fixture = (repo_root()
+                       / "src/repro/analysis/_selftest.py")
+            found = replicated_lint.lint_file(fixture, mode="engine")
+            kinds = {v.kind for v in found}
+            missing = ({"branch", "host-coercion", "rng-draw"}
+                       - kinds)
+            if missing:
+                raise AssertionError(
+                    f"lint selftest: planted kinds not flagged: "
+                    f"{sorted(missing)}")
+            return found
+        return replicated_lint.run(allowlist_path=args.allowlist)
+    if check == "hostsync":
+        from repro.analysis import hostsync
+        if args.selftest:
+            return hostsync.selftest()
+        out = []
+        for b in backends:
+            out.extend(hostsync.audit_backend(backend=b))
+        return out
+    if check == "retrace":
+        from repro.analysis import retrace
+        if args.selftest:
+            return retrace.selftest()
+        out = []
+        for b in backends:
+            out.extend(retrace.audit_backend(backend=b))
+        return out
+    if check == "donation":
+        from repro.analysis import donation
+        if args.selftest:
+            return donation.selftest()
+        return donation.run()
+    raise ValueError(f"unknown check {check!r}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

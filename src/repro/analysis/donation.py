@@ -1,0 +1,216 @@
+"""Donation auditor: prove every donated jit in the engine data path
+actually ALIASES its donated operand in the compiled executable.
+
+`donate_argnums` is a request, not a guarantee: XLA silently falls back
+to a copy whenever it cannot line the output up with the donated buffer
+(shape/layout mismatch, replicated shard_map outputs, cross-device
+moves).  The historical bug class (PR 6): a shard_map'd donated
+`dynamic_update_slice` that copied the WHOLE data buffer on every
+segment write — the out-of-core fill path held two generations of the
+dataset resident and the "bounded host memory" claim was silently
+false, with no test failing.
+
+This auditor closes that hole twice over:
+
+  * statically, it scans the engine sources for `donate_argnums` /
+    `donate_argnames` call sites and requires each to be REGISTERED
+    here with an executable audit — a new donated jit that nobody
+    proved aliasing fails the check (`unregistered-donation`);
+  * dynamically, each registered site is lowered and compiled on
+    representative shapes and must show (a) compiled
+    `memory_analysis().alias_size_in_bytes` covering the donated bytes
+    and (b) on platforms exposing `unsafe_buffer_pointer`, the output
+    occupying the donated input's buffer (`not-aliased`).  Donation
+    warnings raised during execution are violations too.
+
+Everything jax-related is imported lazily so the CLI can force a host
+device count first.
+"""
+from __future__ import annotations
+
+import ast
+import warnings
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.report import Violation, rel, repo_root
+
+#: files whose donated jits are in the engine data path (audited set).
+SCAN_GLOBS = ("src/repro/util/device.py", "src/repro/api/engines/*.py")
+
+DONATE_KEYWORDS = {"donate_argnums", "donate_argnames"}
+
+
+# -- static scan -------------------------------------------------------------
+
+def scan_sites(root: Optional[Path] = None
+               ) -> List[Tuple[str, int, str]]:
+    """(repo-relative file, line, qualname) of every donate_* jit call
+    in the scanned globs. ``qualname`` is the name the jit is bound to
+    (assignment target / enclosing def), the registry key."""
+    root = root or repo_root()
+    paths: List[Path] = []
+    for pattern in SCAN_GLOBS:
+        paths.extend(sorted(root.glob(pattern)))
+    sites: List[Tuple[str, int, str]] = []
+    for path in paths:
+        tree = ast.parse(path.read_text(), filename=str(path))
+        # map every donate call to its nearest binding name
+        parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                parents[id(child)] = node
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and any(k.arg in DONATE_KEYWORDS
+                            for k in node.keywords)):
+                continue
+            name = "<anonymous>"
+            cur: Optional[ast.AST] = node
+            while cur is not None:
+                up = parents.get(id(cur))
+                if isinstance(up, ast.Assign) and up.targets and \
+                        isinstance(up.targets[0], ast.Name):
+                    name = up.targets[0].id
+                    break
+                if isinstance(up, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)):
+                    name = up.name
+                    break
+                cur = up
+            sites.append((rel(path), node.lineno, name))
+    return sites
+
+
+# -- executable audits -------------------------------------------------------
+
+def audit_donated_jit(fn, args: Sequence, donated: Sequence[int], *,
+                      file: str, line: int, qualname: str,
+                      static_kwargs: Optional[dict] = None
+                      ) -> List[Violation]:
+    """Prove ``fn`` (a jitted callable) aliases its donated positional
+    args for these representative ``args``. Returns violations; empty
+    means the donation is real."""
+    import jax
+    import numpy as np
+
+    static_kwargs = static_kwargs or {}
+    out: List[Violation] = []
+    placed = [a if isinstance(a, jax.Array) else jax.device_put(a)
+              for a in args]
+    donated_bytes = sum(int(np.asarray(placed[i]).nbytes)
+                        for i in donated)
+
+    compiled = jax.jit(fn).lower(*placed, **static_kwargs).compile() \
+        if not hasattr(fn, "lower") else \
+        fn.lower(*placed, **static_kwargs).compile()
+    alias_bytes = None
+    try:
+        alias_bytes = int(compiled.memory_analysis().alias_size_in_bytes)
+    except Exception:
+        pass                       # older runtimes: pointer check below
+    if alias_bytes is not None and alias_bytes < donated_bytes:
+        out.append(Violation(
+            checker="donation", kind="not-aliased", file=file, line=line,
+            qualname=qualname,
+            detail=(f"compiled executable aliases {alias_bytes} bytes "
+                    f"but {donated_bytes} bytes were donated — the "
+                    f"donated operand is being COPIED")))
+
+    # pointer identity: the output must occupy the donated input's
+    # buffer(s). Re-place fresh inputs (the lowered call above did not
+    # consume them, but stay independent of that detail).
+    placed = [a if isinstance(a, jax.Array) else jax.device_put(a)
+              for a in args]
+    try:
+        in_ptrs = {p for i in donated
+                   for p in _buffer_ptrs(placed[i])}
+    except Exception:
+        in_ptrs = set()            # backend without buffer pointers
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        result = fn(*placed, **static_kwargs)
+    donation_warnings = [w for w in caught
+                         if "donated" in str(w.message).lower()]
+    for w in donation_warnings:
+        out.append(Violation(
+            checker="donation", kind="donation-unused", file=file,
+            line=line, qualname=qualname,
+            detail=f"runtime refused the donation: {w.message}"))
+    if in_ptrs:
+        leaves = jax.tree.leaves(result)
+        out_ptrs = {p for leaf in leaves for p in _buffer_ptrs(leaf)}
+        if not (in_ptrs & out_ptrs) and not donation_warnings \
+                and (alias_bytes is None or alias_bytes >= donated_bytes):
+            out.append(Violation(
+                checker="donation", kind="not-aliased", file=file,
+                line=line, qualname=qualname,
+                detail=("output buffers do not reuse the donated "
+                        "input's memory (pointer identity failed)")))
+    return out
+
+
+def _buffer_ptrs(arr) -> List[int]:
+    return [s.data.unsafe_buffer_pointer()
+            for s in arr.addressable_shards]
+
+
+def _audit_piece_update() -> List[Violation]:
+    """The shared out-of-core segment writer: repro.util.device."""
+    import numpy as np
+    from repro.util import device as D
+
+    site = _site_of("src/repro/util/device.py", "piece_update")
+    rng = np.random.default_rng(0)
+    Xs = np.zeros((4096, 64), np.float32)
+    seg = rng.normal(size=(512, 64)).astype(np.float32)
+    return audit_donated_jit(
+        D.piece_update, (Xs, seg, np.int32(1024)), donated=(0,),
+        file=site[0], line=site[1], qualname="piece_update")
+
+
+def _site_of(file: str, qualname: str) -> Tuple[str, int]:
+    for f, line, name in scan_sites():
+        if f == file and name == qualname:
+            return f, line
+    return file, 1
+
+
+#: every donated jit the static scan may find, mapped to the audit that
+#: proves it. Adding a donated jit to the data path REQUIRES adding an
+#: audit here — that is the point.
+REGISTRY = {
+    ("src/repro/util/device.py", "piece_update"): _audit_piece_update,
+}
+
+
+def run() -> List[Violation]:
+    violations: List[Violation] = []
+    seen_keys = set()
+    for file, line, name in scan_sites():
+        key = (file, name)
+        seen_keys.add(key)
+        audit = REGISTRY.get(key)
+        if audit is None:
+            violations.append(Violation(
+                checker="donation", kind="unregistered-donation",
+                file=file, line=line, qualname=name,
+                detail=("donated jit with no registered aliasing audit "
+                        "— register it in repro.analysis.donation."
+                        "REGISTRY with a proof it runs in place")))
+    for key, audit in REGISTRY.items():
+        if key in seen_keys:
+            violations.extend(audit())
+        else:
+            violations.append(Violation(
+                checker="donation", kind="stale-registry",
+                file=key[0], line=1, qualname=key[1],
+                detail="registered donation site no longer exists"))
+    return violations
+
+
+def selftest() -> List[Violation]:
+    """Replant the PR 6 bug class and assert the audit still sees it:
+    a donated update whose output CANNOT alias the donated buffer."""
+    from repro.analysis import _selftest as fx
+    return fx.donation_fixture_violations(audit_donated_jit)

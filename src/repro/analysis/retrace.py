@@ -1,0 +1,195 @@
+"""Retrace auditor: actual jit traces == analytic pow2 bucket count.
+
+The schedule's speed rests on a compilation contract: round executables
+are keyed ONLY by the power-of-two lattice the growth controller walks —
+b doubling from b0, capacity in {None} | pow2 — so a full fit compiles
+a handful of executables and every steady-state round is a cache hit.
+The historical bug class: a float hyperparameter (rho) or an
+exact-need capacity sneaking into the jit key, retracing EVERY round —
+fits that "work" but spend their wall clock in XLA.
+
+`repro.util.tracecount` hooks the round bodies (`core.rounds.
+nested_round`, `core.distributed_xl.xl_nested_round`): a jitted
+function's Python body runs exactly once per cache miss, so the counter
+counts REAL traces, keyed by the round statics.  The auditor runs a
+full growth schedule per backend, records which (b, capacity) buckets
+the loop invoked (overflow retries included), and asserts:
+
+  retrace             a (b, capacity) bucket traced more than once —
+                      something off-lattice (rho, shapes, flags) is
+                      keying the cache
+  unexpected-trace    a trace for a bucket the schedule never invoked
+  off-lattice-bucket  an invoked bucket off the pow2 lattice (b not in
+                      the b0-doubling chain, capacity not a power of
+                      two below b)
+
+Missing traces are NOT violations: the jit cache is process-global, so
+a bucket another fit already compiled legitimately traces zero times
+here.  The dangerous direction is only ever MORE traces than buckets.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.report import Violation, rel
+
+Bucket = Tuple[int, Optional[int]]
+
+
+def _parse_bucket(statics: Tuple[Tuple[str, str], ...]) -> Bucket:
+    d = dict(statics)
+    b = int(d["b"])
+    cap = d.get("capacity", "None")
+    return b, (None if cap == "None" else int(cap))
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def lattice_violations(invoked: Sequence[Bucket], b0: int, b_max: int,
+                       *, site_file: str, site_line: int, qualname: str
+                       ) -> List[Violation]:
+    chain = set()
+    b = max(1, b0)
+    while True:
+        chain.add(min(b, b_max))
+        if b >= b_max:
+            break
+        b *= 2
+    out = []
+    for bb, cap in sorted(set(invoked),
+                          key=lambda t: (t[0], t[1] or 0)):
+        bad_b = bb not in chain
+        bad_cap = cap is not None and (not _is_pow2(cap) or cap >= bb)
+        if bad_b or bad_cap:
+            what = []
+            if bad_b:
+                what.append(f"b={bb} not on the b0={b0} doubling chain")
+            if bad_cap:
+                what.append(f"capacity={cap} not a pow2 below b")
+            out.append(Violation(
+                checker="retrace", kind="off-lattice-bucket",
+                file=site_file, line=site_line, qualname=qualname,
+                detail="; ".join(what)))
+    return out
+
+
+def trace_violations(diff: Dict, invoked: Sequence[Bucket], site: str, *,
+                     site_file: str, site_line: int, qualname: str
+                     ) -> List[Violation]:
+    """Compare actual traces (a `tracecount.diff`) against the invoked
+    buckets. Multiple distinct trace keys for one bucket == something
+    besides (b, capacity) keys the cache — the rho-retrace class."""
+    per_bucket: Dict[Bucket, int] = {}
+    keys_of: Dict[Bucket, List] = {}
+    for (s, statics), n in diff.items():
+        if s != site:
+            continue
+        bucket = _parse_bucket(statics)
+        per_bucket[bucket] = per_bucket.get(bucket, 0) + n
+        keys_of.setdefault(bucket, []).append(dict(statics))
+    invoked_set = set(invoked)
+    out: List[Violation] = []
+    for bucket, n in sorted(per_bucket.items(),
+                            key=lambda t: (t[0][0], t[0][1] or 0)):
+        b, cap = bucket
+        if n > 1:
+            varying = {k for d in keys_of[bucket] for k in d
+                       if len({str(x.get(k)) for x in keys_of[bucket]})
+                       > 1}
+            out.append(Violation(
+                checker="retrace", kind="retrace",
+                file=site_file, line=site_line, qualname=qualname,
+                detail=(f"bucket (b={b}, capacity={cap}) traced {n}x "
+                        f"in one fit"
+                        + (f" — cache keyed by {sorted(varying)}"
+                           if varying else ""))))
+        if bucket not in invoked_set:
+            out.append(Violation(
+                checker="retrace", kind="unexpected-trace",
+                file=site_file, line=site_line, qualname=qualname,
+                detail=(f"traced bucket (b={b}, capacity={cap}) that "
+                        f"the schedule never invoked")))
+    return out
+
+
+def _round_site(backend: str):
+    """(tracecount site name, file, line, qualname) of the round body
+    that compiles for this backend."""
+    if backend == "xl":
+        from repro.core import distributed_xl as m
+        fn, site = m.xl_nested_round, "xl_nested_round"
+    else:
+        from repro.core import rounds as m
+        fn, site = m.nested_round, "nested_round"
+    return (site, rel(inspect.getsourcefile(fn)),
+            fn.__code__.co_firstlineno, site)
+
+
+def audit_backend(backend: str = "local", *, n: int = 4096, d: int = 8,
+                  k: int = 8, seed: int = 0) -> List[Violation]:
+    """Run one full growth schedule on ``backend`` and check the trace
+    contract. Multi-device backends need the CLI's forced host device
+    count (see `repro.analysis.__main__`)."""
+    import numpy as np
+
+    from repro.api.config import FitConfig
+    from repro.api.engines import make_engine
+    from repro.api.loop import run_loop
+    from repro.util import tracecount
+
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    config = FitConfig(k=k, b0=max(2 * k, n // 64), seed=seed,
+                       backend=backend, max_rounds=40,
+                       capacity_floor=32).resolve(n)
+    engine = make_engine(config, mesh=_mesh_for(backend, config))
+    run = engine.begin(X, config)
+
+    invoked: List[Bucket] = []
+    inner_step = run.nested_step
+
+    def logged_step(state, b, capacity):
+        invoked.append((b, capacity))
+        return inner_step(state, b, capacity)
+
+    run.nested_step = logged_step
+    b0_local, b_max = run.b, run.b_max
+    before = tracecount.snapshot()
+    run_loop(run, config)
+    diff = tracecount.diff(before)
+
+    site, site_file, site_line, qual = _round_site(backend)
+    qual = f"{qual}[backend={backend}]"
+    out = trace_violations(diff, invoked, site, site_file=site_file,
+                           site_line=site_line, qualname=qual)
+    out.extend(lattice_violations(invoked, b0_local, b_max,
+                                  site_file=site_file,
+                                  site_line=site_line, qualname=qual))
+    return out
+
+
+def _mesh_for(backend: str, config):
+    if backend not in ("mesh", "xl", "multihost"):
+        return None
+    import jax
+
+    devices = jax.devices()
+    if backend == "xl":
+        m = 2 if len(devices) % 2 == 0 and len(devices) > 1 else 1
+        shape = (len(devices) // m, m)
+        return jax.make_mesh(shape, (config.data_axes[0],
+                                     config.model_axis))
+    if backend == "multihost":
+        return None     # the engine builds its own flat mesh
+    return jax.make_mesh((len(devices),), config.data_axes)
+
+
+def selftest() -> List[Violation]:
+    """Replant the historical rho-keyed retrace and an exact-need
+    (non-pow2) capacity schedule; the checker must flag both."""
+    from repro.analysis import _selftest as fx
+    return fx.retrace_fixture_violations(trace_violations,
+                                         lattice_violations)

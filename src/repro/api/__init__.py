@@ -28,7 +28,9 @@ from repro.api.config import (ALGORITHMS, BACKENDS, BOUNDS,
 from repro.api.engines import (Engine, EngineRun, LocalEngine, MeshEngine,
                                MultiHostEngine, XLEngine, make_engine)
 from repro.api.estimator import NestedKMeans, NotFittedError
-from repro.api.loop import FitOutcome, cap_bucket, next_pow2, run_loop
+from repro.api.loop import (FitOutcome, HostRoundInfo, LoopAudit,
+                            cap_bucket, fetch_round_info, next_pow2,
+                            run_loop)
 from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
 
 
@@ -46,7 +48,8 @@ __all__ = [
     "fit",
     "Engine", "EngineRun", "LocalEngine", "MeshEngine", "MultiHostEngine",
     "XLEngine", "make_engine",
-    "run_loop", "FitOutcome", "Telemetry", "RoundCallback",
+    "run_loop", "FitOutcome", "HostRoundInfo", "LoopAudit",
+    "fetch_round_info", "Telemetry", "RoundCallback",
     "final_val_mse", "cap_bucket", "next_pow2",
     "ALGORITHMS", "BOUNDS", "BACKENDS",
 ]

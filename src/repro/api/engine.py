@@ -17,11 +17,15 @@ should import from `repro.api` (public) or the specific module.
 from __future__ import annotations
 
 from repro.api.engines.base import Engine, EngineRun
-from repro.api.engines.local import (LocalEngine, _LocalRun, _lloyd_jit,
-                                     _mb_jit, nested_jit)
-from repro.api.engines.mesh import MeshEngine, _MeshRun
-from repro.api.engines.multihost import MultiHostEngine, _MultiHostRun
-from repro.api.engines.xl import XLEngine, _XLRun
+from repro.api.engines.local import LocalEngine, nested_jit
+from repro.api.engines.local import _LocalRun  # noqa: F401
+from repro.api.engines.local import _lloyd_jit, _mb_jit  # noqa: F401
+from repro.api.engines.mesh import MeshEngine
+from repro.api.engines.mesh import _MeshRun  # noqa: F401
+from repro.api.engines.multihost import MultiHostEngine
+from repro.api.engines.multihost import _MultiHostRun  # noqa: F401
+from repro.api.engines.xl import XLEngine
+from repro.api.engines.xl import _XLRun  # noqa: F401
 from repro.api.engines import make_engine
 from repro.api.loop import FitOutcome, cap_bucket, next_pow2, run_loop
 

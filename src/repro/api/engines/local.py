@@ -12,6 +12,7 @@ from repro.api.engines.base import EngineRun
 from repro.core import rounds
 from repro.core.state import (ElkanBounds, KMeansState, PointState,
                               full_mse, init_state)
+from repro.util.device import piece_update
 
 # shared with estimator.partial_fit so streaming batches of a repeated
 # shape hit the same jit cache as fit()
@@ -47,10 +48,9 @@ class _LocalRun(EngineRun):
                                      config.seed, shuffle=config.shuffle)
             self._Xd = jnp.zeros((N, self._store.d), jnp.float32)
             self._filled = 0
-            self._upd = jax.jit(
-                lambda Xd, u, at: jax.lax.dynamic_update_slice(
-                    Xd, u, (at, 0)),
-                donate_argnums=0)
+            # shared donated segment writer (repro.util.device): the
+            # donation auditor proves it aliases rather than copies
+            self._upd = piece_update
             self.data_fingerprint = self._store.fingerprint()
         else:
             X = np.asarray(X)

@@ -30,16 +30,10 @@ def _slice_shape(idx, shape):
                  - (sl.start or 0) for sl, dim in zip(idx, shape))
 
 
-#: donated per-device-piece writer for `_ensure_prefix`. A shard_map'd
-#: update would be the obvious spelling, but on CPU its donation does
-#: not run in place — every segment write copies the whole (n, d)
-#: buffer, so filling the prefix holds two buffer generations resident
-#: (~2x the data in host RSS, measured). A plain jit over one device's
-#: piece DOES update in place, so the fill stays at one buffer plus a
-#: segment of churn.
-_piece_update = jax.jit(
-    lambda Xs, seg, at: jax.lax.dynamic_update_slice(Xs, seg, (at, 0)),
-    donate_argnums=0)
+# donated per-device-piece writer for `_ensure_prefix` — shared with
+# the local engine and proven aliased by the donation auditor; see
+# repro.util.device for why it is NOT a shard_map'd update.
+from repro.util.device import piece_update as _piece_update
 
 
 class _MeshRun(EngineRun):

@@ -38,13 +38,25 @@ directory state it may later restore from. `run.capture` / `restore`
 are collectives — every process participates in the gathers and
 broadcasts even though only one touches the disk.
 
+The RoundInfo scalars land on the host at ONE site — `fetch_round_info`,
+called once per round (once per overflow attempt) — and every branch
+below it reads the resulting plain-Python `HostRoundInfo`. That makes
+the invariant mechanically checkable: `repro.analysis` lints this module
+for branches that do not derive from `HostRoundInfo` / the resolved
+config / the sanctioned `run` primitives (`python -m repro.analysis
+lint`), and audits a live fit for device->host syncs outside the
+`LoopAudit` sanctioned scopes (`python -m repro.analysis hostsync`).
+Both run in CI via scripts/ci_static.sh.
+
 Anything appended to this loop must preserve the invariant: derive new
 decisions from `RoundInfo` (extend it if needed — it is psum-reduced in
-one place per engine), or route them through a `run` hook that
-guarantees replication.
+one place per engine, and lands via `fetch_round_info`), or route them
+through a `run` hook that guarantees replication — and keep the
+checkers green rather than allowlisting around them.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -59,6 +71,78 @@ from repro.api.engines.base import EngineRun
 from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
 from repro.checkpoint.store import CheckpointStore
 from repro.core.state import KMeansState, RoundInfo
+
+
+# --------------------------------------------------------------------------
+# the ONE steady-state device->host crossing
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HostRoundInfo:
+    """`RoundInfo` landed on the host: plain Python scalars.
+
+    Every per-round decision in `run_loop` branches on THIS object (or
+    on the resolved config / engine statics) — never on a live device
+    value. The fields are psum-reduced before they leave the round, so
+    the same bits land on every process (see the module docstring).
+    """
+    batch_mse: float
+    n_changed: int
+    n_recomputed: int
+    n_active: int
+    overflow: bool
+    grow: bool
+    r_median: float
+    p_max: float
+
+
+def fetch_round_info(info: RoundInfo) -> HostRoundInfo:
+    """Land the round's psum-reduced scalars on the host in ONE transfer.
+
+    This is the single sanctioned device->host read of the steady-state
+    loop: everything the schedule branches on crosses here, together,
+    once per round. Scattering `float(info.x)` reads through the loop
+    body would work too — but then nothing distinguishes a sanctioned
+    sync from an accidental one, and the host-sync auditor
+    (`repro.analysis.hostsync`) could not scope its guard. Keep new
+    device reads OUT of the loop body: extend `RoundInfo` instead and
+    read the field off the result of this function.
+    """
+    host = jax.device_get(info)
+    return HostRoundInfo(
+        batch_mse=float(host.batch_mse), n_changed=int(host.n_changed),
+        n_recomputed=int(host.n_recomputed), n_active=int(host.n_active),
+        overflow=bool(host.overflow), grow=bool(host.grow),
+        r_median=float(host.r_median), p_max=float(host.p_max))
+
+
+class LoopAudit:
+    """Instrumentation seam for `repro.analysis.hostsync`.
+
+    `run_loop` brackets every round body with ``round_scope()`` and each
+    sanctioned device<->host crossing inside it with
+    ``sanctioned_scope(what)``, where ``what`` is one of:
+
+      * ``"round_info"`` — the `fetch_round_info` scalar landing;
+      * ``"eval_mse"``   — validation eval at the configured cadence;
+      * ``"sync_flag"``  — the coordinator's wall-clock broadcast;
+      * ``"checkpoint"`` — `run.capture` gathers + store writes.
+
+    The default scopes are no-ops, so production fits pay nothing. The
+    host-sync auditor subclasses this to disallow transfers inside the
+    round scope and re-allow them inside the sanctioned scopes — any
+    OTHER device->host sync in the steady-state loop becomes a
+    diagnosable violation instead of a silent stall-per-round.
+    """
+
+    def round_scope(self):
+        return contextlib.nullcontext()
+
+    def sanctioned_scope(self, what: str):
+        return contextlib.nullcontext()
+
+
+_NULL_AUDIT = LoopAudit()
 
 
 # --------------------------------------------------------------------------
@@ -108,7 +192,8 @@ def run_loop(run: EngineRun, config: FitConfig, *,
              on_round: Optional[RoundCallback] = None,
              resume_from: Optional[Union[str, Path, CheckpointStore]] = None,
              resolved_resume: Optional[Tuple[int, Dict[str, Any]]] = None,
-             trace: Optional[List[Dict[str, Any]]] = None
+             trace: Optional[List[Dict[str, Any]]] = None,
+             audit: Optional[LoopAudit] = None
              ) -> FitOutcome:
     """Growth schedule + capacity bucketing + overflow retry + patience.
 
@@ -136,7 +221,12 @@ def run_loop(run: EngineRun, config: FitConfig, *,
     AFTER the round's schedule updates. This is the loop's control-flow
     fingerprint: two processes of the same multihost fit must produce
     identical traces (scripts/smoke_multihost.py asserts exactly that).
+
+    ``audit``: optional `LoopAudit` whose scopes bracket each round body
+    and its sanctioned device<->host crossings (the host-sync auditor's
+    hook). ``None`` uses the no-op scopes.
     """
+    audit = audit if audit is not None else _NULL_AUDIT
     algorithm = config.algorithm
     bounds = config.bounds
     state = run.state
@@ -208,15 +298,20 @@ def run_loop(run: EngineRun, config: FitConfig, *,
                     else None)
         run.barrier()
 
-    def record(info: RoundInfo) -> None:
+    def record(hinfo: HostRoundInfo) -> None:
+        val_mse = None
+        if len(telemetry) % config.eval_every == 0:
+            # validation eval is a sanctioned device->host read (it is
+            # outside the paper's timed region, like every eval)
+            with audit.sanctioned_scope("eval_mse"):
+                val_mse = run.eval_mse(state)
         rec = Telemetry(
-            round=len(telemetry), t=t_work, b=int(info.n_active),
-            batch_mse=float(info.batch_mse),
-            n_changed=int(info.n_changed),
-            n_recomputed=int(info.n_recomputed),
-            grow=bool(info.grow), r_median=float(info.r_median),
-            val_mse=(run.eval_mse(state)
-                     if len(telemetry) % config.eval_every == 0 else None))
+            round=len(telemetry), t=t_work, b=hinfo.n_active,
+            batch_mse=hinfo.batch_mse,
+            n_changed=hinfo.n_changed,
+            n_recomputed=hinfo.n_recomputed,
+            grow=hinfo.grow, r_median=hinfo.r_median,
+            val_mse=val_mse)
         telemetry.append(rec)
         if on_round:
             on_round(rec)
@@ -243,66 +338,82 @@ def run_loop(run: EngineRun, config: FitConfig, *,
     for _ in range(start_round, config.max_rounds):
         if converged:        # resumed an already-finished fit
             break
-        if timed:
-            # the wall clock is the one host-local input to the
-            # schedule: the coordinator decides, every process obeys
-            if run.sync_flag(t_work >= config.time_budget_s):
-                break
-        t0 = time.perf_counter()
-
-        if algorithm == "lloyd":
-            new_state, info = run.lloyd_step(state)
-        elif algorithm in ("mb", "mbf"):
-            new_state, info = run.mb_step(state, fixed=(algorithm == "mbf"))
-        else:  # tb family (incl. gb via bounds="none")
-            while True:
-                new_state, info = run.nested_step(state, b, capacity)
-                if not bool(info.overflow):
+        with audit.round_scope():
+            if timed:
+                # the wall clock is the one host-local input to the
+                # schedule: the coordinator decides, every process obeys
+                with audit.sanctioned_scope("sync_flag"):
+                    out_of_time = run.sync_flag(
+                        t_work >= config.time_budget_s)
+                if out_of_time:
                     break
-                # overflow retry: same input state, doubled bucket —
-                # exactness is never traded for speed.
-                capacity = (None if capacity is None or 2 * capacity >= b
-                            else 2 * capacity)
+            t0 = time.perf_counter()
 
-        jax.block_until_ready(new_state.stats.C)
-        t_work += time.perf_counter() - t0
-        state = new_state
-        record(info)
+            if algorithm == "lloyd":
+                new_state, info = run.lloyd_step(state)
+            elif algorithm in ("mb", "mbf"):
+                new_state, info = run.mb_step(
+                    state, fixed=(algorithm == "mbf"))
+            else:  # tb family (incl. gb via bounds="none")
+                while True:
+                    new_state, info = run.nested_step(state, b, capacity)
+                    jax.block_until_ready(new_state.stats.C)
+                    with audit.sanctioned_scope("round_info"):
+                        hinfo = fetch_round_info(info)
+                    if not hinfo.overflow:
+                        break
+                    # overflow retry: same input state, doubled bucket —
+                    # exactness is never traded for speed.
+                    capacity = (None
+                                if capacity is None or 2 * capacity >= b
+                                else 2 * capacity)
 
-        if algorithm == "tb":
-            if bounds == "hamerly2":
-                need = -(-int(info.n_recomputed) // run.n_shards)
-                if bool(info.grow) and b < run.b_max:
-                    # a doubling adds b new points that always need a
-                    # full pass — start the grown bucket dense
-                    capacity = None
+            if algorithm in ("lloyd", "mb", "mbf"):
+                jax.block_until_ready(new_state.stats.C)
+                with audit.sanctioned_scope("round_info"):
+                    hinfo = fetch_round_info(info)
+            t_work += time.perf_counter() - t0
+            state = new_state
+            record(hinfo)
+
+            if algorithm == "tb":
+                if bounds == "hamerly2":
+                    need = -(-hinfo.n_recomputed // run.n_shards)
+                    if hinfo.grow and b < run.b_max:
+                        # a doubling adds b new points that always need
+                        # a full pass — start the grown bucket dense
+                        capacity = None
+                    else:
+                        capacity = cap_bucket(need, b,
+                                              config.capacity_floor)
+                if hinfo.grow:
+                    b = min(2 * b, run.b_max)
+                # p_max rides along in the psum-consistent RoundInfo —
+                # no extra device->host sync outside the timed region
+                if (hinfo.n_active >= run.n_active_target
+                        and hinfo.n_changed == 0
+                        and hinfo.p_max == 0.0):
+                    quiet_rounds += 1
                 else:
-                    capacity = cap_bucket(need, b, config.capacity_floor)
-            if bool(info.grow):
-                b = min(2 * b, run.b_max)
-            # p_max rides along in the psum-consistent RoundInfo — no
-            # extra device->host sync outside the timed region
-            if (int(info.n_active) >= run.n_active_target
-                    and int(info.n_changed) == 0
-                    and float(info.p_max) == 0.0):
-                quiet_rounds += 1
-            else:
-                quiet_rounds = 0
-            if trace is not None:
-                trace.append({"round": len(telemetry) - 1,
-                              "b_global": b * run.n_shards,
-                              "capacity": capacity,
-                              "quiet_rounds": quiet_rounds})
-            if quiet_rounds >= config.converge_patience:
-                converged = True
-                break
-        elif algorithm == "lloyd":
-            if int(info.n_changed) == 0:
-                converged = True
-                break
+                    quiet_rounds = 0
+                if trace is not None:
+                    trace.append({"round": len(telemetry) - 1,
+                                  "b_global": b * run.n_shards,
+                                  "capacity": capacity,
+                                  "quiet_rounds": quiet_rounds})
+                if quiet_rounds >= config.converge_patience:
+                    converged = True
+                    break
+            elif algorithm == "lloyd":
+                if hinfo.n_changed == 0:
+                    converged = True
+                    break
 
-        if store is not None and len(telemetry) % ckpt.save_every == 0:
-            save_checkpoint()
+            if store is not None and len(telemetry) % ckpt.save_every == 0:
+                # capture's gathers + the coordinator's disk write are
+                # sanctioned crossings (bracketed by run.barrier)
+                with audit.sanctioned_scope("checkpoint"):
+                    save_checkpoint()
 
     if store is not None:
         # one final save so a resumed-after-finish fit is a no-op loop

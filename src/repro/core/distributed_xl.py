@@ -54,6 +54,7 @@ from repro.core.rounds import _euclid
 from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
                               PointState, RoundInfo, centroid_update)
 from repro.kernels import ops, ref
+from repro.util import tracecount
 
 
 # --------------------------------------------------------------------------
@@ -261,6 +262,10 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
     `_assign_elkan_xl`). RoundInfo is replica-consistent on every
     device.
     """
+    # trace accounting (see repro.util.tracecount): one count per jit
+    # trace, keyed on the intended executable-cache statics
+    tracecount.record("xl_nested_round", b=b, capacity=capacity, rho=rho,
+                      bounds=bounds)
     k_local = state.stats.C.shape[0]
     k = k_local * m
     C_local = state.stats.C

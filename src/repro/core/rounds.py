@@ -24,9 +24,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import controller
-from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
-                              PointState, RoundInfo, centroid_update)
+from repro.core.state import (ElkanBounds, KMeansState, RoundInfo,
+                              centroid_update)
 from repro.kernels import ops, ref
+from repro.util import tracecount
 
 
 # --------------------------------------------------------------------------
@@ -332,6 +333,11 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
     shard whose real-row count is not a multiple of the shard count caps
     ``b`` against its own real rows while b stays a shared static.
     """
+    # trace accounting: this body runs once per jit trace; the statics
+    # here ARE the intended executable-cache key (repro.analysis.retrace
+    # asserts the trace count never exceeds the pow2 bucket count)
+    tracecount.record("nested_round", b=b, capacity=capacity, rho=rho,
+                      bounds=bounds)
     k = state.stats.C.shape[0]
     x = X[:b]
     a_prev = state.points.a[:b]

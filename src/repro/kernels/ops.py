@@ -8,7 +8,6 @@ padding to MXU tiles would dominate, and as the semantic fallback).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.cluster_sum import cluster_sum_pallas

@@ -30,7 +30,6 @@ from repro import configs
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import input_specs as ispec
 from repro.launch.mesh import make_production_mesh
-from repro.models import model as M
 from repro.models import sharding as shd
 from repro.optim import adamw
 from repro.roofline import analysis as ra

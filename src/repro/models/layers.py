@@ -18,7 +18,6 @@ Attention comes in three entry points:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

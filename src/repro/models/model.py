@@ -19,8 +19,7 @@ Entry points: init_params / train_logits_and_loss / prefill / decode.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -16,14 +16,13 @@ flash-decoding partial-softmax all-reduces).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models import model as M
+from repro.configs.base import ModelConfig
 
 TP = "model"
 

@@ -7,7 +7,7 @@ Params may be stored bf16; the update math runs in f32.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

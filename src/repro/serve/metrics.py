@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import math
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 
 class LatencyHistogram:

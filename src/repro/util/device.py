@@ -1,0 +1,31 @@
+"""Shared donated device-buffer writers (the out-of-core fill path).
+
+THE donated per-device-piece segment writer used by every engine's
+`_ensure_prefix`: a growing fit fills storage rows ``[filled, b)`` of
+the device data buffer in bounded segments, and the buffer generation
+must be updated IN PLACE — the whole point of the out-of-core plane is
+that neither the host nor a device ever holds two copies of the data.
+
+A shard_map'd update would be the obvious multi-device spelling, but on
+CPU its donation does not reliably run in place — every segment write
+then copies the whole (n, d) buffer, so filling the prefix holds two
+buffer generations resident (~2x the data in RSS, measured in PR 6). A
+plain jit over ONE device's piece does update in place, so engines
+apply `piece_update` per addressable shard and reassemble the global
+array (`jax.make_array_from_single_device_arrays`).
+
+Keep every donated jit in the engine data path HERE: the donation
+auditor (`repro.analysis.donation`) proves each site's donated operand
+is actually aliased in the compiled executable — an unregistered
+donation site elsewhere in the engines fails the audit, so the PR 6
+copy class cannot silently return.
+"""
+from __future__ import annotations
+
+import jax
+
+#: (piece, segment, row) -> piece with segment written at ``row``;
+#: donates (and on CPU/GPU aliases) the piece buffer.
+piece_update = jax.jit(
+    lambda Xs, seg, at: jax.lax.dynamic_update_slice(Xs, seg, (at, 0)),
+    donate_argnums=0)

@@ -1,0 +1,62 @@
+"""Jit trace counters for the round factories (retrace accounting).
+
+The host loop compiles ONE executable per power-of-two (b, capacity)
+bucket; a change that sneaks a per-round-varying value into the static
+argument set (or rebuilds the jit wrapper each call) silently turns the
+steady-state loop into a retrace-per-round loop — the fit still
+converges, just ~100x slower at scale, which is exactly the regression
+the paper's speedup claim cannot survive.
+
+The round bodies call `record(site, **statics)` at their top. A jit'd
+function's Python body runs exactly once per TRACE (cache misses only),
+so the counter keyed on the bucket statics counts real traces: a bucket
+traced twice, or a set of bucket keys that grows with the round count,
+is a retrace bug. `repro.analysis.retrace` resets the counters, drives
+a full growth schedule, and asserts traces == distinct invoked buckets.
+
+Counting is a dict increment at trace time only — steady-state rounds
+never touch it — so the hooks stay on unconditionally. Eager (non-jit)
+calls of a round body also increment; audits bracket their own runs
+with `snapshot()` / diffs, so unrelated eager activity cannot leak in.
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from typing import Dict, Tuple
+
+_lock = threading.Lock()
+_counts: Counter = Counter()
+
+#: key: (site, sorted tuple of (static name, repr(value)))
+TraceKey = Tuple[str, Tuple[Tuple[str, str], ...]]
+
+
+def record(site: str, **statics) -> None:
+    """Count one trace of ``site`` with the given static arguments.
+
+    Called from inside round-function bodies, i.e. under jax tracing —
+    values must not be inspected (they are tracers for the array args),
+    so only the STATIC arguments belong here, rendered via repr.
+    """
+    key = (site, tuple(sorted((k, repr(v)) for k, v in statics.items())))
+    with _lock:
+        _counts[key] += 1
+
+
+def snapshot() -> Dict[TraceKey, int]:
+    """Current counts (copy) — diff two snapshots to scope one run."""
+    with _lock:
+        return dict(_counts)
+
+
+def diff(before: Dict[TraceKey, int]) -> Dict[TraceKey, int]:
+    """Traces recorded since ``before`` (a `snapshot()` result)."""
+    with _lock:
+        return {k: v - before.get(k, 0) for k, v in _counts.items()
+                if v - before.get(k, 0) > 0}
+
+
+def reset() -> None:
+    with _lock:
+        _counts.clear()

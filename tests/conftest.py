@@ -1,4 +1,3 @@
-import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here on purpose — unit/smoke tests must see the real

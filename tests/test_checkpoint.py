@@ -1,7 +1,5 @@
 """Checkpoint store: roundtrip, atomicity, GC, checksums, elasticity."""
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Pallas kernels vs pure-jnp oracles, interpret=True shape/dtype sweeps."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

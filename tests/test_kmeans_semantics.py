@@ -6,9 +6,7 @@ The paper's central exactness claims:
   * mb-f centroids are the exact mean of CURRENT assignments;
   * gb-inf with b0=N reproduces Lloyd's algorithm.
 """
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,7 +3,6 @@
 hypothesis is an optional dev dependency (see requirements-dev.txt);
 without it this module skips instead of aborting collection.
 """
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

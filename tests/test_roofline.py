@@ -1,7 +1,6 @@
 """Loop-aware HLO cost model: validated against known programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import analysis as ra

@@ -7,7 +7,7 @@ import pytest
 
 from repro.api import FitConfig, NestedKMeans, NotFittedError
 from repro.serve import (ClusterService, CodebookSnapshot, IngestQueue,
-                         SnapshotRef, codebook_checksum)
+                         SnapshotRef)
 
 
 def wait_until(pred, timeout=20.0, dt=0.005):
