@@ -3,9 +3,10 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import List
+from typing import List, Optional
 
 from repro.data import synthetic
+from repro.obs import OBS_SCHEMA
 
 # resolved FitConfig dict of every fit the suites run; benchmarks/run.py
 # drains this into artifacts/bench/manifests.json. In-process fits are
@@ -15,8 +16,37 @@ from repro.data import synthetic
 MANIFESTS: List[dict] = []
 
 
-def record_manifest(suite: str, config_dict: dict) -> None:
-    MANIFESTS.append({"suite": suite, "config": config_dict})
+def record_manifest(suite: str, config_dict: dict, *,
+                    wall_s: Optional[float] = None,
+                    obs: Optional[dict] = None,
+                    nulls: Optional[dict] = None) -> None:
+    """Record one run's manifest entry.
+
+    Beyond the resolved config, each entry carries ``wall_s`` (end-to-
+    end fit wall-clock), an ``obs`` per-round summary (rounds, total
+    k-scans, retrace count, peak queue depth where a queue exists) and
+    the ``obs_schema`` version. Every null is EXPLAINED: the ``nulls``
+    dict maps each absent field to the reason it is absent, so a
+    manifest reader can distinguish "not measured" from "measured
+    zero" — the old ``kernel_backend: null`` blind spot, made explicit.
+    """
+    reasons = dict(nulls or {})
+    if wall_s is None:
+        reasons.setdefault(
+            "wall_s", "fit ran in a subprocess; the child's wall clock "
+                      "was not captured")
+    if obs is None:
+        reasons.setdefault(
+            "obs", "fit not driven through api.fit in this process — "
+                   "no per-round summary collected")
+    if (config_dict or {}).get("kernel_backend") is None:
+        reasons.setdefault(
+            "kernel_backend", "auto (resolves to the ref kernels; the "
+                              "Pallas hot path is not yet exercised by "
+                              "the engines — see ROADMAP)")
+    MANIFESTS.append({"suite": suite, "config": config_dict,
+                      "obs_schema": OBS_SCHEMA, "wall_s": wall_s,
+                      "obs": obs, "nulls": reasons})
 
 
 @functools.lru_cache(maxsize=None)

@@ -26,31 +26,49 @@ def main() -> int:
                     help="paper-scale datasets / longer budgets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,table2,pruning,"
-                         "roofline,serve,xl,multihost,outofcore")
+                         "roofline,serve,xl,multihost,outofcore,obs")
     ap.add_argument("--suite", dest="only",
                     help="alias for --only")
     args = ap.parse_args()
     quick = not args.full
 
-    # record the exact FitConfig of every fit the suites run
+    # record the exact FitConfig of every fit the suites run, plus its
+    # wall clock and a per-round obs summary (k-scans off the telemetry,
+    # jit traces off the tracecount hooks scoped to this one fit)
     from benchmarks import common
     from repro import api
+    from repro.util import tracecount
     manifests = common.MANIFESTS
     current = {"suite": None}
     orig_fit = api.fit
 
     def recording_fit(X, config, **kw):
+        tc0 = tracecount.snapshot()
+        t0 = time.perf_counter()
         out = orig_fit(X, config, **kw)
-        common.record_manifest(current["suite"], out.config.to_dict())
+        wall = time.perf_counter() - t0
+        obs = {
+            "rounds": len(out.telemetry),
+            "kscans_total": int(sum(r.n_recomputed
+                                    for r in out.telemetry)),
+            "retrace_count": int(sum(tracecount.diff(tc0).values())),
+            "peak_queue_depth": None,
+        }
+        common.record_manifest(
+            current["suite"], out.config.to_dict(),
+            wall_s=round(wall, 3), obs=obs,
+            nulls={"peak_queue_depth":
+                   "batch fit — no ingest queue in the path (the serve "
+                   "suite records its queue's high-water mark)"})
         return out
 
     api.fit = recording_fit
 
     from benchmarks import (fig1_mse_vs_time, fig2_rho_effect, multihost,
-                            outofcore, pruning_effectiveness,
-                            roofline_report, serve_latency,
-                            table1_throughput, table2_final_quality,
-                            xl_engine)
+                            obs_overhead, outofcore,
+                            pruning_effectiveness, roofline_report,
+                            serve_latency, table1_throughput,
+                            table2_final_quality, xl_engine)
     suites = {
         "table1": table1_throughput.main,
         "fig1": fig1_mse_vs_time.main,
@@ -62,6 +80,7 @@ def main() -> int:
         "xl": xl_engine.main,
         "multihost": multihost.main,
         "outofcore": outofcore.main,
+        "obs": obs_overhead.main,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     ok = True

@@ -96,9 +96,9 @@ def bench_inline(km, Q, stream, n):
 
 def bench_background(km, Q, stream, n):
     import time
-    svc = ClusterService(
-        km, micro_batch=MICRO, flush_after_s=0.02,
-        queue=IngestQueue(max_rows=4 * COARSE, policy="drop-oldest"))
+    queue = IngestQueue(max_rows=4 * COARSE, policy="drop-oldest")
+    svc = ClusterService(km, micro_batch=MICRO, flush_after_s=0.02,
+                         queue=queue)
     svc.start()
     lat, pos = [], 0
     for _ in range(n):
@@ -108,8 +108,9 @@ def bench_background(km, Q, stream, n):
         svc.predict(Q)
         lat.append(time.perf_counter() - t0)
     metrics = svc.export_metrics()
+    peak_depth = queue.peak_depth
     svc.stop()
-    return np.array(lat), metrics
+    return np.array(lat), metrics, peak_depth
 
 
 def main(quick: bool = True):
@@ -142,7 +143,8 @@ def main(quick: bool = True):
     # not about which phase caught a scheduler hiccup.
     off_a = bench_off(kms[0], Q, n_req)
     inline, folds = bench_inline(kms[1], Q, stream, n_req)
-    background, svc_metrics = bench_background(kms[2], Q, stream, n_req)
+    background, svc_metrics, peak_depth = bench_background(
+        kms[2], Q, stream, n_req)
     off_b = bench_off(kms[0], Q, n_req)
     off = off_a if np.percentile(off_a, 99) >= np.percentile(off_b, 99) \
         else off_b
@@ -170,6 +172,23 @@ def main(quick: bool = True):
     ok &= common.check(
         f"inline refresh exceeds the {P99_HEADROOM}x p99 bound",
         ratio_inl > P99_HEADROOM, f"ratio={ratio_inl:.2f}")
+
+    # the serving run's own manifest entry: the background service's
+    # queue high-water mark lives here (serve_latency.json's schema is
+    # frozen; manifests.json is where obs summaries accumulate)
+    common.record_manifest(
+        "serve", out.config.to_dict(),
+        obs={"rounds": len(out.telemetry),
+             "kscans_total": int(sum(r.n_recomputed
+                                     for r in out.telemetry)),
+             "retrace_count": None,
+             "peak_queue_depth": int(peak_depth)},
+        nulls={"wall_s": "serving benchmark — the measured quantity is "
+                         "per-request latency (serve_latency.json), "
+                         "not fit wall-clock",
+               "retrace_count": "serving-path folds share the process-"
+                                "wide jit caches; per-fit attribution "
+                                "is in the base fit's entry"})
 
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "serve_latency.json").write_text(json.dumps({

@@ -54,6 +54,12 @@ if [ "$#" -eq 0 ]; then
     # the dataset-fingerprint resume gate, and a 2-process cluster
     # streaming off one store directory).
     timeout 1000 python -m pytest -x -q tests/test_store.py
+    # the observability plane (fast tracer/registry/instrumented-fit
+    # tests ran above; this adds the slow-marked subprocess smoke:
+    # traced fits on all four backends where the event log must parse
+    # and its round count must equal the loop's own schedule trace,
+    # plus lint + hostsync staying green on the INSTRUMENTED loop).
+    timeout 700 python -m pytest -x -q tests/test_obs.py
     # full static + invariant gate: ruff (if installed), the runtime
     # auditors (hostsync / retrace / donation) across backends, and the
     # planted-bug selftests proving every checker still has teeth.

@@ -41,6 +41,10 @@ def main(argv=None) -> int:
                         "backends (default: 4)")
     p.add_argument("--allowlist", default=None,
                    help="alternate allowlist file for the lint")
+    p.add_argument("--trace-dir", default=None,
+                   help="attach a repro.obs FitObserver to the hostsync "
+                        "audits (per-backend subdirectories) — gates "
+                        "that tracing adds no device->host syncs")
     p.add_argument("--selftest", action="store_true",
                    help="instead of auditing the tree, replant each "
                         "checker's historical bug class and FAIL if it "
@@ -108,7 +112,11 @@ def _run_check(check: str, args, backends: List[str]):
             return hostsync.selftest()
         out = []
         for b in backends:
-            out.extend(hostsync.audit_backend(backend=b))
+            # one subdirectory per backend: trace files are keyed by
+            # process id, and every single-process audit here is pid 0
+            td = (f"{args.trace_dir.rstrip('/')}/{b}"
+                  if args.trace_dir else None)
+            out.extend(hostsync.audit_backend(backend=b, trace_dir=td))
         return out
     if check == "retrace":
         from repro.analysis import retrace

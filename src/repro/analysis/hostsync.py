@@ -180,11 +180,14 @@ def _unpatch() -> None:
 # -- audit driver ------------------------------------------------------------
 
 def audit_backend(backend: str = "local", *, n: int = 2048, d: int = 8,
-                  k: int = 8, seed: int = 0,
-                  engine_factory=None) -> List[Violation]:
+                  k: int = 8, seed: int = 0, engine_factory=None,
+                  trace_dir: Optional[str] = None) -> List[Violation]:
     """Warm up, then run one audited fit on ``backend``; returns the
     unsanctioned-sync violations. ``engine_factory`` overrides engine
-    construction (the selftest injects a leaky engine)."""
+    construction (the selftest injects a leaky engine). ``trace_dir``
+    attaches a `repro.obs.FitObserver` to the AUDITED fit — proving the
+    observability plane adds no device->host syncs of its own (the
+    PR 8 acceptance gate: hostsync stays green with tracing on)."""
     import numpy as np
 
     from repro.api.config import FitConfig
@@ -199,18 +202,30 @@ def audit_backend(backend: str = "local", *, n: int = 2048, d: int = 8,
                        backend=backend, max_rounds=24, eval_every=4,
                        capacity_floor=32).resolve(n)
 
-    def fit(audit: Optional[HostSyncAudit]):
+    def fit(audit: Optional[HostSyncAudit], obs=None):
         if engine_factory is not None:
             engine = engine_factory(config)
         else:
             engine = make_engine(config, mesh=_mesh_for(backend, config))
         run = engine.begin(X, config, X_val=X_val)
-        return run_loop(run, config, audit=audit)
+        return run_loop(run, config, audit=audit, obs=obs)
 
     fit(None)                       # compile every bucket un-audited
+    obs = None
+    if trace_dir is not None:
+        import jax
+
+        from repro.obs import FitObserver
+        obs = FitObserver(trace_dir, process_id=jax.process_index(),
+                          k=k, d=d, meta={"backend": backend,
+                                          "audit": "hostsync"})
     audit = HostSyncAudit(label=f"backend={backend}")
-    with audit.installed():
-        fit(audit)
+    try:
+        with audit.installed():
+            fit(audit, obs=obs)
+    finally:
+        if obs is not None:
+            obs.close()
     return audit.violations
 
 

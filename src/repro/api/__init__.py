@@ -28,7 +28,7 @@ from repro.api.config import (ALGORITHMS, BACKENDS, BOUNDS,
 from repro.api.engines import (Engine, EngineRun, LocalEngine, MeshEngine,
                                MultiHostEngine, XLEngine, make_engine)
 from repro.api.estimator import NestedKMeans, NotFittedError
-from repro.api.loop import (FitOutcome, HostRoundInfo, LoopAudit,
+from repro.api.loop import (FitOutcome, HostRoundInfo, LoopAudit, ObsSink,
                             cap_bucket, fetch_round_info, next_pow2,
                             run_loop)
 from repro.api.telemetry import RoundCallback, Telemetry, final_val_mse
@@ -48,7 +48,7 @@ __all__ = [
     "fit",
     "Engine", "EngineRun", "LocalEngine", "MeshEngine", "MultiHostEngine",
     "XLEngine", "make_engine",
-    "run_loop", "FitOutcome", "HostRoundInfo", "LoopAudit",
+    "run_loop", "FitOutcome", "HostRoundInfo", "LoopAudit", "ObsSink",
     "fetch_round_info", "Telemetry", "RoundCallback",
     "final_val_mse", "cap_bucket", "next_pow2",
     "ALGORITHMS", "BOUNDS", "BACKENDS",

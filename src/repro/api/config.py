@@ -122,6 +122,12 @@ class FitConfig:
                   "multihost" (set all three, with a per-process
                   process_id, or none — None means the caller already
                   initialised jax.distributed, or runs one process).
+      trace_dir   directory for `repro.obs` structured traces: the
+                  estimator attaches a `FitObserver` writing rotating
+                  JSONL span/event logs (per-process files on
+                  multihost) plus a metrics export. None (default)
+                  disables tracing — the loop's obs seam is a no-op.
+                  Read back with ``python -m repro.obs summarize DIR``.
     """
     k: int
     algorithm: str = "tb"
@@ -145,6 +151,7 @@ class FitConfig:
     coordinator_address: Optional[str] = None
     num_processes: Optional[int] = None
     process_id: Optional[int] = None
+    trace_dir: Optional[str] = None
 
     def __post_init__(self):
         if isinstance(self.checkpoint, dict):
@@ -214,6 +221,11 @@ class FitConfig:
             raise ValueError(
                 f"process_id must be in [0, num_processes), got "
                 f"{self.process_id} of {self.num_processes}")
+        if self.trace_dir is not None and (
+                not isinstance(self.trace_dir, str) or not self.trace_dir):
+            raise ValueError(
+                f"trace_dir must be a non-empty directory path or None, "
+                f"got {self.trace_dir!r}")
         if not isinstance(self.data_axes, tuple):
             object.__setattr__(self, "data_axes", tuple(self.data_axes))
         if not self.model_axis or not isinstance(self.model_axis, str):

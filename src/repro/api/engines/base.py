@@ -15,6 +15,7 @@ a pod rests on these contracts, not on the loop's own code.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
 
@@ -24,6 +25,25 @@ import numpy as np
 
 from repro.api.config import FitConfig
 from repro.core.state import ClusterStats, KMeansState, RoundInfo
+
+
+class _NullObsSink:
+    """Default obs sink: every engine hook is a guaranteed no-op.
+
+    This is deliberately NOT `api.loop.ObsSink` (loop imports this
+    module; importing loop back would cycle) — just the two hooks an
+    engine body ever touches. `run_loop` swaps in the real sink via
+    `EngineRun.bind_obs` before the first round.
+    """
+
+    def span(self, name: str, **attrs):
+        return contextlib.nullcontext()
+
+    def count(self, name: str, n: int = 1) -> None:
+        pass
+
+
+_NO_OBS = _NullObsSink()
 
 
 class EngineRun:
@@ -78,6 +98,26 @@ class EngineRun:
         Multi-process contract: must return the SAME float on every
         process (the loop's eval cadence and telemetry feed off it).
         """
+        return None
+
+    # -- observability (see repro.obs; default: no-ops) ---------------------
+
+    #: the bound obs sink; engine bodies call ``self._obs.span(...)`` /
+    #: ``self._obs.count(...)`` unconditionally — the null sink makes
+    #: untraced fits pay two attribute loads, nothing more.
+    _obs: Any = _NO_OBS
+
+    def bind_obs(self, obs: Any) -> None:
+        """Attach the fit's obs sink (called once by `run_loop` before
+        round 0). The sink must only ever be handed HOST values — an
+        engine must never pass it a live device array (the hostsync
+        auditor enforces this on instrumented fits)."""
+        self._obs = obs if obs is not None else _NO_OBS
+
+    def store_metrics(self) -> Optional[Dict[str, Any]]:
+        """Cumulative `repro.data.store` read metrics as a JSON-safe
+        dict, or None when this run is not store-backed. Host-side
+        counters only — reading them must not touch a device."""
         return None
 
     # -- host-side views of device state ------------------------------------

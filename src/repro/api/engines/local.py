@@ -88,14 +88,21 @@ class _LocalRun(EngineRun):
         already-covered prefixes — steady-state rounds fetch nothing."""
         if self._store is None or b <= self._filled:
             return
-        lo = self._filled
-        while lo < b:
-            hi = min(b, lo + _IO_SEG_ROWS)
-            rows = self._store.take(self._perm[lo:hi]).astype(
-                np.float32, copy=False)
-            self._Xd = self._upd(self._Xd, jnp.asarray(rows), np.int32(lo))
-            lo = hi
-        self._filled = b
+        with self._obs.span("ingest", rows=b - self._filled):
+            lo = self._filled
+            while lo < b:
+                hi = min(b, lo + _IO_SEG_ROWS)
+                rows = self._store.take(self._perm[lo:hi]).astype(
+                    np.float32, copy=False)
+                self._Xd = self._upd(self._Xd, jnp.asarray(rows),
+                                     np.int32(lo))
+                lo = hi
+            self._filled = b
+
+    def store_metrics(self):
+        if self._store is None:
+            return None
+        return self._store.metrics.to_dict()
 
     def nested_step(self, state, b, capacity):
         self._ensure_prefix(b)

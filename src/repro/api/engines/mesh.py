@@ -201,30 +201,38 @@ class _MeshRun(EngineRun):
     def _ensure_prefix(self, b: int) -> None:
         if self._src is None or b <= self._filled:
             return
-        shape, sh = self._Xd.shape, self._Xd.sharding
-        rps = shape[0] // self.n_shards      # storage rows per shard
-        # shard id held by each addressable piece (this process's
-        # devices only on multihost; replicas repeat under the XL
-        # engine's model axis and each replica is written in place)
-        owned = [(s.index[0].start or 0) // rps
-                 for s in self._Xd.addressable_shards]
-        uniq, inv = np.unique(np.asarray(owned), return_inverse=True)
-        lo = self._filled
-        while lo < b:
-            hi = min(b, lo + self._IO_SEG_ROWS)
-            blk = self._fetch_block(uniq, lo, hi)
-            pieces = [
-                _piece_update(s.data,
-                              jax.device_put(blk[inv[j]], s.device),
-                              np.int32(lo))
-                for j, s in enumerate(self._Xd.addressable_shards)]
-            self._Xd = jax.make_array_from_single_device_arrays(
-                shape, sh, pieces)
-            lo = hi
-        self._filled = b
-        # warm the chunks of the NEXT doubling while this round computes
-        self._src.prefetch_positions(b * self.n_shards,
-                                     min(2 * b, self.b_max) * self.n_shards)
+        with self._obs.span("ingest", rows=b - self._filled):
+            shape, sh = self._Xd.shape, self._Xd.sharding
+            rps = shape[0] // self.n_shards    # storage rows per shard
+            # shard id held by each addressable piece (this process's
+            # devices only on multihost; replicas repeat under the XL
+            # engine's model axis and each replica is written in place)
+            owned = [(s.index[0].start or 0) // rps
+                     for s in self._Xd.addressable_shards]
+            uniq, inv = np.unique(np.asarray(owned), return_inverse=True)
+            lo = self._filled
+            while lo < b:
+                hi = min(b, lo + self._IO_SEG_ROWS)
+                blk = self._fetch_block(uniq, lo, hi)
+                pieces = [
+                    _piece_update(s.data,
+                                  jax.device_put(blk[inv[j]], s.device),
+                                  np.int32(lo))
+                    for j, s in enumerate(self._Xd.addressable_shards)]
+                self._Xd = jax.make_array_from_single_device_arrays(
+                    shape, sh, pieces)
+                lo = hi
+            self._filled = b
+            # warm the chunks of the NEXT doubling while this round
+            # computes
+            self._src.prefetch_positions(
+                b * self.n_shards,
+                min(2 * b, self.b_max) * self.n_shards)
+
+    def store_metrics(self):
+        if self._src is None:
+            return None
+        return self._src.store.metrics.to_dict()
 
     def _host_init_state(self, C0: np.ndarray) -> KMeansState:
         """The paper's initial state, built host-side.

@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.api.config import FitConfig
 from repro.api.engines import Engine, make_engine, nested_jit
-from repro.api.loop import FitOutcome, run_loop
+from repro.api.loop import FitOutcome, fetch_round_info, run_loop
 from repro.api.telemetry import RoundCallback, Telemetry
 from repro.checkpoint.store import CheckpointStore
 from repro.core.state import full_mse, init_state
@@ -123,6 +123,19 @@ class NestedKMeans:
                 raise ValueError(
                     "fit(resume=True) requires config.checkpoint")
             run = self.engine.begin(X, cfg, X_val=X_val, init_C=init_C)
+            obs = None
+            if cfg.trace_dir is not None:
+                # built lazily so untraced fits never import repro.obs;
+                # process_id keys the per-process JSONL files on
+                # multihost (every process traces its own host loop)
+                from repro.obs import FitObserver
+                obs = FitObserver(
+                    cfg.trace_dir, process_id=jax.process_index(),
+                    k=cfg.k, d=int(run.state.stats.C.shape[-1]),
+                    meta={"backend": cfg.backend,
+                          "algorithm": cfg.algorithm,
+                          "n_points": run.n_points,
+                          "n_shards": run.n_shards, "seed": cfg.seed})
             resume_from = None
             resolved = None
             if resume:
@@ -147,9 +160,13 @@ class NestedKMeans:
                                 f"restore a foreign fit")
                     resume_from = store
                     resolved = (step, extra)
-            out = run_loop(run, cfg, on_round=self.on_round,
-                           resume_from=resume_from,
-                           resolved_resume=resolved)
+            try:
+                out = run_loop(run, cfg, on_round=self.on_round,
+                               resume_from=resume_from,
+                               resolved_resume=resolved, obs=obs)
+            finally:
+                if obs is not None:
+                    obs.close()
             self._outcome = out
             # fetch_stats: the state's own leaves on single-process
             # engines; a host gather on multihost (so predict/export
@@ -224,13 +241,12 @@ class NestedKMeans:
                 # the centroids have moved past the fit's outcome: its
                 # labels/state no longer describe this estimator
                 self._outcome_stale = True
-            rec = Telemetry(
-                round=len(self.telemetry_),
-                t=t_prev + time.perf_counter() - t0, b=int(info.n_active),
-                batch_mse=float(info.batch_mse),
-                n_changed=int(info.n_changed),
-                n_recomputed=int(info.n_recomputed),
-                grow=bool(info.grow), r_median=float(info.r_median))
+            # one transfer + the shared record builder — the same path
+            # run_loop takes, so the two telemetry streams cannot drift
+            hinfo = fetch_round_info(info)
+            rec = Telemetry.from_round(
+                hinfo, round=len(self.telemetry_),
+                t=t_prev + time.perf_counter() - t0)
             self.telemetry_.append(rec)
             if self.on_round:
                 self.on_round(rec)

@@ -145,6 +145,45 @@ class LoopAudit:
 _NULL_AUDIT = LoopAudit()
 
 
+class ObsSink:
+    """Observability seam for `repro.obs` — sibling of `LoopAudit`.
+
+    `run_loop` hands every completed round's HOST-landed scalars (the
+    `HostRoundInfo`, the schedule's b/capacity/patience values, the
+    work-clock delta, the data-store read counters) to ``round_end``,
+    brackets eval/checkpoint (and, via `EngineRun.bind_obs`, store
+    ingest) with ``span``, and notes overflow retries with ``count``.
+
+    The base class is a no-op, so untraced fits pay a few method calls
+    per ROUND — nothing per point, and nothing on a device. The real
+    implementation is `repro.obs.FitObserver` (structured JSONL traces,
+    a metrics registry, the roofline utilization gauge), which this
+    seam deliberately does not import: observers consume only values
+    that already crossed at a sanctioned point, so instrumentation can
+    never add a device->host sync — the hostsync auditor runs with
+    tracing ON to prove it.
+    """
+
+    def span(self, name: str, **attrs):
+        return contextlib.nullcontext()
+
+    def count(self, name: str, n: int = 1) -> None:
+        pass
+
+    def round_end(self, round: int, hinfo: "HostRoundInfo",
+                  **attrs) -> None:
+        pass
+
+    def fit_end(self, **summary) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+_NULL_OBS = ObsSink()
+
+
 # --------------------------------------------------------------------------
 # result record
 # --------------------------------------------------------------------------
@@ -193,7 +232,8 @@ def run_loop(run: EngineRun, config: FitConfig, *,
              resume_from: Optional[Union[str, Path, CheckpointStore]] = None,
              resolved_resume: Optional[Tuple[int, Dict[str, Any]]] = None,
              trace: Optional[List[Dict[str, Any]]] = None,
-             audit: Optional[LoopAudit] = None
+             audit: Optional[LoopAudit] = None,
+             obs: Optional[ObsSink] = None
              ) -> FitOutcome:
     """Growth schedule + capacity bucketing + overflow retry + patience.
 
@@ -225,8 +265,16 @@ def run_loop(run: EngineRun, config: FitConfig, *,
     ``audit``: optional `LoopAudit` whose scopes bracket each round body
     and its sanctioned device<->host crossings (the host-sync auditor's
     hook). ``None`` uses the no-op scopes.
+
+    ``obs``: optional `ObsSink` receiving each round's host-landed
+    scalars, span timings (eval / checkpoint / store ingest) and
+    overflow-retry counts — usually a `repro.obs.FitObserver`. ``None``
+    uses the no-op sink. The loop does NOT close the sink; its creator
+    does (the estimator closes the observer it built from
+    ``config.trace_dir``).
     """
     audit = audit if audit is not None else _NULL_AUDIT
+    obs = obs if obs is not None else _NULL_OBS
     algorithm = config.algorithm
     bounds = config.bounds
     state = run.state
@@ -238,6 +286,7 @@ def run_loop(run: EngineRun, config: FitConfig, *,
     converged = False
     start_round = 0
     timed = math.isfinite(config.time_budget_s)
+    run.bind_obs(obs)
 
     ckpt = config.checkpoint
     store = (CheckpointStore(ckpt.checkpoint_dir, keep=ckpt.keep)
@@ -298,21 +347,25 @@ def run_loop(run: EngineRun, config: FitConfig, *,
                     else None)
         run.barrier()
 
-    def record(hinfo: HostRoundInfo) -> None:
+    def record(hinfo: HostRoundInfo, dt_s: float) -> None:
         val_mse = None
         if len(telemetry) % config.eval_every == 0:
             # validation eval is a sanctioned device->host read (it is
             # outside the paper's timed region, like every eval)
-            with audit.sanctioned_scope("eval_mse"):
+            with audit.sanctioned_scope("eval_mse"), obs.span("eval_mse"):
                 val_mse = run.eval_mse(state)
-        rec = Telemetry(
-            round=len(telemetry), t=t_work, b=hinfo.n_active,
-            batch_mse=hinfo.batch_mse,
-            n_changed=hinfo.n_changed,
-            n_recomputed=hinfo.n_recomputed,
-            grow=hinfo.grow, r_median=hinfo.r_median,
-            val_mse=val_mse)
+        rec = Telemetry.from_round(hinfo, round=len(telemetry), t=t_work,
+                                   val_mse=val_mse)
         telemetry.append(rec)
+        # the obs sink sees only already-host-landed values: hinfo, the
+        # schedule's own plain-Python scalars, and the engine's host-side
+        # store counters — nothing here can add a device->host sync.
+        # b/capacity are PRE-update: the values THIS round actually used.
+        obs.round_end(rec.round, hinfo, dt_s=dt_s, t_work=t_work,
+                      b_global=min(b * run.n_shards, run.n_points),
+                      capacity=capacity, quiet_rounds=quiet_rounds,
+                      algorithm=algorithm, val_mse=val_mse,
+                      store=run.store_metrics())
         if on_round:
             on_round(rec)
 
@@ -364,6 +417,7 @@ def run_loop(run: EngineRun, config: FitConfig, *,
                         break
                     # overflow retry: same input state, doubled bucket —
                     # exactness is never traded for speed.
+                    obs.count("overflow_retry")
                     capacity = (None
                                 if capacity is None or 2 * capacity >= b
                                 else 2 * capacity)
@@ -372,9 +426,10 @@ def run_loop(run: EngineRun, config: FitConfig, *,
                 jax.block_until_ready(new_state.stats.C)
                 with audit.sanctioned_scope("round_info"):
                     hinfo = fetch_round_info(info)
-            t_work += time.perf_counter() - t0
+            dt_s = time.perf_counter() - t0
+            t_work += dt_s
             state = new_state
-            record(hinfo)
+            record(hinfo, dt_s)
 
             if algorithm == "tb":
                 if bounds == "hamerly2":
@@ -412,14 +467,16 @@ def run_loop(run: EngineRun, config: FitConfig, *,
             if store is not None and len(telemetry) % ckpt.save_every == 0:
                 # capture's gathers + the coordinator's disk write are
                 # sanctioned crossings (bracketed by run.barrier)
-                with audit.sanctioned_scope("checkpoint"):
+                with audit.sanctioned_scope("checkpoint"), \
+                        obs.span("checkpoint"):
                     save_checkpoint()
 
     if store is not None:
         # one final save so a resumed-after-finish fit is a no-op loop
-        save_checkpoint()
-        if run.is_coordinator:
-            store.wait()
+        with obs.span("checkpoint"):
+            save_checkpoint()
+            if run.is_coordinator:
+                store.wait()
         run.barrier()
 
     # final validation point (outside the timed region, like every eval),
@@ -437,6 +494,8 @@ def run_loop(run: EngineRun, config: FitConfig, *,
             b=min(b * run.n_shards, run.n_points),
             batch_mse=None, n_changed=0, n_recomputed=0, grow=False,
             r_median=None, val_mse=final))
+
+    obs.fit_end(rounds=len(telemetry), t_work=t_work, converged=converged)
 
     # un-shuffle the final assignments back to the caller's row order;
     # host_points is a gather collective on multi-process runs

@@ -32,7 +32,8 @@ def build_codebook(E, k: int, seed: int, *,
                    checkpoint_dir: str | None = None,
                    save_every: int = 20,
                    resume: bool = False,
-                   backend: str = "local") -> NestedKMeans:
+                   backend: str = "local",
+                   trace_dir: str | None = None) -> NestedKMeans:
     """Fit the embedding codebook through the unified api.
 
     ``E`` is the data to cluster: an in-memory ``(n, d)`` array (the
@@ -47,6 +48,10 @@ def build_codebook(E, k: int, seed: int, *,
     fit bit-identically instead of restarting. ``resume`` without a
     checkpoint dir is a loud error — silently refitting from scratch is
     exactly what a resuming operator does not want.
+
+    ``trace_dir`` attaches a `repro.obs.FitObserver` to the fit: every
+    round's scalars, span timings and roofline utilization land as
+    JSONL under the directory (`python -m repro.obs summarize DIR`).
 
     ``backend`` selects the execution engine for the FIT: "local"
     (default), "mesh" (points sharded over the host devices), "xl"
@@ -89,7 +94,7 @@ def build_codebook(E, k: int, seed: int, *,
                     b0=min(2 * k, n), bounds="hamerly2",
                     max_rounds=200, seed=seed, checkpoint=ck,
                     backend=backend, data_axes=("data",),
-                    model_axis="model")
+                    model_axis="model", trace_dir=trace_dir)
     km = NestedKMeans(cfg, mesh=mesh)
     km.fit(E, resume=resume)
     if backend != "local":
@@ -140,6 +145,10 @@ def main():
                          "| mesh (points sharded) | xl (points + "
                          "centroids sharded, for large K) | multihost "
                          "(jax.distributed processes)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write repro.obs structured traces of the "
+                         "codebook fit here (inspect with `python -m "
+                         "repro.obs summarize DIR`)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -160,7 +169,8 @@ def main():
                                   checkpoint_dir=args.checkpoint_dir,
                                   save_every=args.save_every,
                                   resume=args.resume,
-                                  backend=args.codebook_backend)
+                                  backend=args.codebook_backend,
+                                  trace_dir=args.trace_dir)
         what = (f"store {args.codebook_store}" if args.codebook_store
                 else f"{E.shape} embeddings")
         print(f"codebook: k={args.codebook} over {what} "
@@ -173,9 +183,9 @@ def main():
         service = ClusterService(
             codebook, micro_batch=256, flush_after_s=0.05,
             queue=IngestQueue(max_rows=4096, dedup=True)).start()
-    elif args.resume or args.checkpoint_dir:
-        ap.error("--checkpoint-dir/--resume only apply to the codebook "
-                 "fit; pass --codebook K")
+    elif args.resume or args.checkpoint_dir or args.trace_dir:
+        ap.error("--checkpoint-dir/--resume/--trace-dir only apply to "
+                 "the codebook fit; pass --codebook K")
 
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, P)))}
     if cfg.family == "encdec":

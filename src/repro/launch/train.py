@@ -66,6 +66,10 @@ def main():
                          "(points sharded over the visible devices) | "
                          "xl (points + centroids sharded — large K) | "
                          "multihost (jax.distributed processes)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write repro.obs structured traces of the "
+                         "codebook fit here (inspect with `python -m "
+                         "repro.obs summarize DIR`)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -140,7 +144,8 @@ def main():
         km = build_codebook(args.codebook_store or E, args.codebook,
                             args.seed, checkpoint_dir=ckpt_dir,
                             resume=args.resume and ckpt_dir is not None,
-                            backend=args.codebook_backend)
+                            backend=args.codebook_backend,
+                            trace_dir=args.trace_dir)
         sizes = np.bincount(km.predict(E), minlength=args.codebook)
         print(f"embedding codebook (k={args.codebook}): "
               f"VQ-MSE {-km.score(E) / E.shape[0]:.6f} "

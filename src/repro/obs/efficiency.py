@@ -1,0 +1,86 @@
+"""Roofline-aware efficiency: achieved work per round vs the bound.
+
+The unit of work is the **k-scan**: one point scanned against all ``k``
+centroids. A nested round's k-scan count is exactly
+``RoundInfo.n_recomputed`` — the points whose bounds failed and paid a
+full distance pass (the quantity Newling & Fleuret's bounds papers
+track as *the* scaling signal). From ``(k, d)`` a k-scan costs
+
+  * FLOPs:      ``3 * d * k``   (one fused mul-add + compare per dim
+                 per centroid, the standard distance-kernel count);
+  * HBM bytes:  ``4 * d``       (stream the f32 row once; the centroid
+                 block is k*d*4 ONCE per round, not per point).
+
+`WorkModel` prices a round with ``roofline/analysis.roofline_terms``
+(TPU v5e peak model) and turns the measured wall time into a
+**utilization** fraction — achieved / attainable, given the round's own
+arithmetic intensity. This is the live gauge the ROADMAP's "as fast as
+the hardware allows" north star is measured by: a CPU fit reads a few
+percent; the Pallas hot-path PR is expected to move it, and now has an
+in-tree number to move.
+
+Plain Python + the jax-free roofline module — safe to import anywhere,
+including inside the transfer-guarded host loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.roofline.analysis import Roofline, roofline_terms
+
+#: FLOPs per (point, centroid, dim): diff, square (fused mul-add), and
+#: the running-min compare amortised across dims.
+FLOPS_PER_DIST = 3.0
+
+#: bytes per f32 element streamed from memory.
+F32_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundWork:
+    """Priced work of one round: counts, the bound, and utilization."""
+    kscans: int            # points that paid a full k-centroid scan
+    dist_evals: int        # kscans * k (point-centroid distance evals)
+    flops: float
+    hbm_bytes: float
+    bound_s: float         # roofline lower bound for this much work
+    bottleneck: str        # "compute" | "memory" | "collective"
+    dt_s: Optional[float] = None
+    utilization: Optional[float] = None   # bound_s / dt_s, in [0, ~1]
+
+
+class WorkModel:
+    """Prices nested rounds for a fixed ``(k, d)`` problem shape."""
+
+    def __init__(self, k: int, d: int):
+        if k < 1 or d < 1:
+            raise ValueError(f"WorkModel needs k, d >= 1, got k={k} d={d}")
+        self.k = int(k)
+        self.d = int(d)
+
+    def flops(self, n_recomputed: int) -> float:
+        return FLOPS_PER_DIST * self.d * self.k * n_recomputed
+
+    def hbm_bytes(self, n_recomputed: int) -> float:
+        # each recomputed row streams once; the centroid block streams
+        # once per round regardless of how many points scan it
+        return F32_BYTES * (n_recomputed * self.d + self.k * self.d)
+
+    def roofline(self, n_recomputed: int) -> Roofline:
+        return roofline_terms(self.flops(n_recomputed),
+                              self.hbm_bytes(n_recomputed), 0.0)
+
+    def round_work(self, n_recomputed: int,
+                   dt_s: Optional[float] = None) -> RoundWork:
+        """Price a round; with ``dt_s`` also compute utilization."""
+        n = max(0, int(n_recomputed))
+        rl = self.roofline(n)
+        bound = rl.step_time_s()
+        util = None
+        if dt_s is not None and dt_s > 0.0:
+            util = bound / dt_s
+        return RoundWork(kscans=n, dist_evals=n * self.k,
+                         flops=rl.flops, hbm_bytes=rl.hbm_bytes,
+                         bound_s=bound, bottleneck=rl.bottleneck,
+                         dt_s=dt_s, utilization=util)

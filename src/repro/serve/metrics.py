@@ -1,123 +1,12 @@
-"""Serving metrics: counters, gauges and latency histograms, JSON-safe.
+"""Serving metrics — now a thin shim over `repro.obs.metrics`.
 
-`ServeMetrics` is the single sink `ClusterService` writes into; its
-`to_dict()` is what `benchmarks/serve_latency.py` and operators scrape.
-Everything is guarded by one small lock — the hot-path cost is two dict
-updates per request, negligible next to a predict dispatch.
+`LatencyHistogram` and `ServeMetrics` were generalized into the shared
+observability registry (`repro.obs.metrics`) so the serving plane, the
+fit loop and the data store export through one metrics surface (JSON +
+Prometheus text). The classes keep their historical names, public
+attributes and byte-identical ``to_dict()`` schema; import from either
+module — this one stays for existing callers.
 """
-from __future__ import annotations
+from repro.obs.metrics import LatencyHistogram, ServeMetrics
 
-import math
-import threading
-from typing import Dict, Optional
-
-
-class LatencyHistogram:
-    """Log-spaced latency histogram (seconds) with percentile estimates.
-
-    Buckets span 1 µs .. ~100 s at 1.12x spacing (~240 buckets), so a
-    percentile read from bucket edges is within ~12% of the true value —
-    fine for dashboards; benchmarks that assert on ratios keep their own
-    exact sample arrays.
-    """
-
-    BASE = 1.12
-    LO = 1e-6
-
-    def __init__(self):
-        self.counts: Dict[int, int] = {}
-        self.n = 0
-        self.total = 0.0
-        self.max = 0.0
-
-    def record(self, seconds: float) -> None:
-        b = 0 if seconds <= self.LO else \
-            int(math.log(seconds / self.LO, self.BASE)) + 1
-        self.counts[b] = self.counts.get(b, 0) + 1
-        self.n += 1
-        self.total += seconds
-        if seconds > self.max:
-            self.max = seconds
-
-    def percentile(self, q: float) -> float:
-        """Upper edge of the bucket holding quantile ``q`` (0..1)."""
-        if not self.n:
-            return float("nan")
-        rank = q * (self.n - 1)
-        seen = 0
-        for b in sorted(self.counts):
-            seen += self.counts[b]
-            if seen > rank:
-                return self.LO * self.BASE ** b
-        return self.max
-
-    def to_dict(self) -> dict:
-        return {
-            "count": self.n,
-            "mean_s": self.total / self.n if self.n else float("nan"),
-            "p50_s": self.percentile(0.50),
-            "p99_s": self.percentile(0.99),
-            "max_s": self.max,
-        }
-
-
-class ServeMetrics:
-    """Counters + histograms for one `ClusterService`."""
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.predict_requests = 0
-        self.predict_rows = 0
-        self.refreshes = 0
-        self.refresh_rows = 0
-        self.escalations = 0
-        self.ingest_calls = 0
-        self.predict_latency = LatencyHistogram()
-        self.refresh_latency = LatencyHistogram()
-
-    # -- recording -----------------------------------------------------------
-
-    def observe_predict(self, seconds: float, rows: int) -> None:
-        with self._lock:
-            self.predict_requests += 1
-            self.predict_rows += rows
-            self.predict_latency.record(seconds)
-
-    def observe_refresh(self, seconds: float, rows: int) -> None:
-        with self._lock:
-            self.refreshes += 1
-            self.refresh_rows += rows
-            self.refresh_latency.record(seconds)
-
-    def observe_escalation(self) -> None:
-        with self._lock:
-            self.escalations += 1
-
-    def observe_ingest(self) -> None:
-        with self._lock:
-            self.ingest_calls += 1
-
-    # -- export --------------------------------------------------------------
-
-    def to_dict(self, *, queue_stats: Optional[dict] = None,
-                snapshot=None) -> dict:
-        """JSON-safe export; pass the queue/snapshot for their gauges."""
-        with self._lock:
-            out = {
-                "predict": {"requests": self.predict_requests,
-                            "rows": self.predict_rows,
-                            "latency": self.predict_latency.to_dict()},
-                "refresh": {"count": self.refreshes,
-                            "rows": self.refresh_rows,
-                            "escalations": self.escalations,
-                            "latency": self.refresh_latency.to_dict()},
-                "ingest_calls": self.ingest_calls,
-            }
-        if queue_stats is not None:
-            out["queue"] = dict(queue_stats)
-        if snapshot is not None:
-            out["snapshot"] = {"version": snapshot.version,
-                               "age_s": snapshot.age_s(),
-                               "n_rounds": snapshot.n_rounds,
-                               "batch_mse": snapshot.batch_mse}
-        return out
+__all__ = ["LatencyHistogram", "ServeMetrics"]

@@ -65,6 +65,7 @@ class IngestQueue:
         self._evicted = 0           # drop-oldest / reservoir replacement
         self._deduped = 0
         self._drained = 0
+        self._peak_depth = 0        # high-water mark (obs manifests)
 
     # -- producer side -------------------------------------------------------
 
@@ -103,6 +104,8 @@ class IngestQueue:
                 self._buf.append((pid, X[i]))
                 self._accepted += 1
                 accepted += 1
+            if len(self._buf) > self._peak_depth:
+                self._peak_depth = len(self._buf)
             if accepted:
                 self._not_empty.notify_all()
         return accepted
@@ -185,6 +188,15 @@ class IngestQueue:
     def depth(self) -> int:
         with self._lock:
             return len(self._buf)
+
+    @property
+    def peak_depth(self) -> int:
+        """Deepest the buffer has ever been. Deliberately NOT part of
+        `stats()`: the stats dict is embedded verbatim in the serving
+        JSON exports, whose schema stays byte-compatible; obs manifests
+        read the high-water mark from here instead."""
+        with self._lock:
+            return self._peak_depth
 
     def close(self) -> None:
         """Reject future puts; wake every waiter. Buffered rows remain
