@@ -19,13 +19,16 @@ MANIFESTS: List[dict] = []
 def record_manifest(suite: str, config_dict: dict, *,
                     wall_s: Optional[float] = None,
                     obs: Optional[dict] = None,
+                    kernel_plan: Optional[dict] = None,
                     nulls: Optional[dict] = None) -> None:
     """Record one run's manifest entry.
 
     Beyond the resolved config, each entry carries ``wall_s`` (end-to-
     end fit wall-clock), an ``obs`` per-round summary (rounds, total
-    k-scans, retrace count, peak queue depth where a queue exists) and
-    the ``obs_schema`` version. Every null is EXPLAINED: the ``nulls``
+    k-scans, retrace count, peak queue depth where a queue exists), the
+    resolved ``kernel_plan`` the fit dispatched through (backend, block
+    sizes, bucket — `repro.kernels.plan.KernelPlan.to_dict`) and the
+    ``obs_schema`` version. Every null is EXPLAINED: the ``nulls``
     dict maps each absent field to the reason it is absent, so a
     manifest reader can distinguish "not measured" from "measured
     zero" — the old ``kernel_backend: null`` blind spot, made explicit.
@@ -39,14 +42,15 @@ def record_manifest(suite: str, config_dict: dict, *,
         reasons.setdefault(
             "obs", "fit not driven through api.fit in this process — "
                    "no per-round summary collected")
-    if (config_dict or {}).get("kernel_backend") is None:
+    if kernel_plan is None:
         reasons.setdefault(
-            "kernel_backend", "auto (resolves to the ref kernels; the "
-                              "Pallas hot path is not yet exercised by "
-                              "the engines — see ROADMAP)")
+            "kernel_plan", "fit ran in a subprocess or predates the "
+                           "dispatch plane — the resolved plan was not "
+                           "surfaced on its FitOutcome")
     MANIFESTS.append({"suite": suite, "config": config_dict,
                       "obs_schema": OBS_SCHEMA, "wall_s": wall_s,
-                      "obs": obs, "nulls": reasons})
+                      "obs": obs, "kernel_plan": kernel_plan,
+                      "nulls": reasons})
 
 
 @functools.lru_cache(maxsize=None)

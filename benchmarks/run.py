@@ -26,7 +26,8 @@ def main() -> int:
                     help="paper-scale datasets / longer budgets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,table1,table2,pruning,"
-                         "roofline,serve,xl,multihost,outofcore,obs")
+                         "roofline,serve,kernels,xl,multihost,outofcore,"
+                         "obs")
     ap.add_argument("--suite", dest="only",
                     help="alias for --only")
     args = ap.parse_args()
@@ -42,30 +43,53 @@ def main() -> int:
     current = {"suite": None}
     orig_fit = api.fit
 
+    def harvest_utilization(trace_dir):
+        """Last-round `fit_roofline_utilization` gauge from the trace
+        dir's metrics export (max across processes on multihost)."""
+        if trace_dir is None:
+            return None
+        vals = []
+        for f in sorted(Path(trace_dir).glob("metrics-p*.json")):
+            try:
+                g = json.loads(f.read_text()).get("gauges", {})
+            except (OSError, ValueError):
+                continue
+            if g.get("fit_roofline_utilization") is not None:
+                vals.append(float(g["fit_roofline_utilization"]))
+        return max(vals) if vals else None
+
     def recording_fit(X, config, **kw):
         tc0 = tracecount.snapshot()
         t0 = time.perf_counter()
         out = orig_fit(X, config, **kw)
         wall = time.perf_counter() - t0
+        util = harvest_utilization(out.config.trace_dir)
         obs = {
             "rounds": len(out.telemetry),
             "kscans_total": int(sum(r.n_recomputed
                                     for r in out.telemetry)),
             "retrace_count": int(sum(tracecount.diff(tc0).values())),
             "peak_queue_depth": None,
+            "fit_roofline_utilization": util,
         }
+        nulls = {"peak_queue_depth":
+                 "batch fit — no ingest queue in the path (the serve "
+                 "suite records its queue's high-water mark)"}
+        if util is None:
+            nulls["fit_roofline_utilization"] = (
+                "no trace_dir on this fit — the roofline gauge lives "
+                "in the obs metrics export (the kernels suite traces "
+                "every fit and records it per backend)")
         common.record_manifest(
             current["suite"], out.config.to_dict(),
             wall_s=round(wall, 3), obs=obs,
-            nulls={"peak_queue_depth":
-                   "batch fit — no ingest queue in the path (the serve "
-                   "suite records its queue's high-water mark)"})
+            kernel_plan=getattr(out, "kernel_plan", None), nulls=nulls)
         return out
 
     api.fit = recording_fit
 
-    from benchmarks import (fig1_mse_vs_time, fig2_rho_effect, multihost,
-                            obs_overhead, outofcore,
+    from benchmarks import (fig1_mse_vs_time, fig2_rho_effect, kernels,
+                            multihost, obs_overhead, outofcore,
                             pruning_effectiveness, roofline_report,
                             serve_latency, table1_throughput,
                             table2_final_quality, xl_engine)
@@ -77,6 +101,7 @@ def main() -> int:
         "pruning": pruning_effectiveness.main,
         "roofline": roofline_report.main,
         "serve": serve_latency.main,
+        "kernels": kernels.main,
         "xl": xl_engine.main,
         "multihost": multihost.main,
         "outofcore": outofcore.main,

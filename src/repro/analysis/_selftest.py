@@ -153,7 +153,7 @@ def retrace_fixture_violations(trace_violations, lattice_violations
     before = tracecount.snapshot()
     for rho in (1.90, 1.91, 1.92):
         nested_jit(X, state, b=32, rho=rho, bounds="hamerly2",
-                   capacity=16, use_shalf=True, kernel_backend=None)
+                   capacity=16, use_shalf=True, plan=None)
         invoked.append((32, 16))
     diff = tracecount.diff(before)
     found = trace_violations(

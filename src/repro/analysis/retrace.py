@@ -129,10 +129,13 @@ def _round_site(backend: str):
 
 
 def audit_backend(backend: str = "local", *, n: int = 4096, d: int = 8,
-                  k: int = 8, seed: int = 0) -> List[Violation]:
+                  k: int = 8, seed: int = 0,
+                  kernel_backend: str = None) -> List[Violation]:
     """Run one full growth schedule on ``backend`` and check the trace
     contract. Multi-device backends need the CLI's forced host device
-    count (see `repro.analysis.__main__`)."""
+    count (see `repro.analysis.__main__`). ``kernel_backend`` forces a
+    kernel plan ("pallas" proves the fused dispatch keeps one trace per
+    bucket — `scripts/smoke_kernels.py` runs exactly that)."""
     import numpy as np
 
     from repro.api.config import FitConfig
@@ -144,7 +147,8 @@ def audit_backend(backend: str = "local", *, n: int = 4096, d: int = 8,
     X = rng.normal(size=(n, d)).astype(np.float32)
     config = FitConfig(k=k, b0=max(2 * k, n // 64), seed=seed,
                        backend=backend, max_rounds=40,
-                       capacity_floor=32).resolve(n)
+                       capacity_floor=32,
+                       kernel_backend=kernel_backend).resolve(n)
     engine = make_engine(config, mesh=_mesh_for(backend, config))
     run = engine.begin(X, config)
 

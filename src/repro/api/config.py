@@ -91,7 +91,9 @@ class FitConfig:
       max_rounds / time_budget_s   work budgets.
       eval_every  validation-MSE cadence (rounds), when X_val is given.
       use_shalf   include Hamerly's s(j)/2 test in the hamerly2 bound.
-      kernel_backend  None (auto) | "ref" | "pallas".
+      kernel_backend  None (auto: pallas on TPU, ref elsewhere) |
+                  "ref" | "pallas" — resolved once per fit into a
+                  `repro.kernels.plan.KernelPlan` at `engine.begin`.
       shuffle     pre-shuffle the data (paper init = first k of shuffle).
       converge_patience  quiet full-batch rounds before declaring
                   convergence.

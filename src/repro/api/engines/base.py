@@ -73,6 +73,10 @@ class EngineRun:
     orig_index: np.ndarray = None
     n_points: int = 0
     data_fingerprint: Optional[Dict[str, Any]] = None
+    #: the fit's resolved `repro.kernels.plan.KernelPlan` (None only for
+    #: engines predating the dispatch plane); surfaced in `FitOutcome`
+    #: and the benchmark manifests.
+    kernel_plan: Optional[Any] = None
 
     # -- round executors (pure: state in -> (state, info)) ------------------
 

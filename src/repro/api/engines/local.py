@@ -12,17 +12,20 @@ from repro.api.engines.base import EngineRun
 from repro.core import rounds
 from repro.core.state import (ElkanBounds, KMeansState, PointState,
                               full_mse, init_state)
+from repro.kernels.plan import resolve_plan
 from repro.util.device import piece_update
 
 # shared with estimator.partial_fit so streaming batches of a repeated
-# shape hit the same jit cache as fit()
+# shape hit the same jit cache as fit(). The resolved KernelPlan is a
+# frozen (hashable) dataclass, so it rides the static args exactly like
+# the bucket keys — one trace per (b, capacity, plan) tuple, and the
+# plan is constant for a fit.
 nested_jit = jax.jit(
     rounds.nested_round,
     static_argnames=("b", "rho", "bounds", "capacity", "use_shalf",
-                     "kernel_backend", "data_axes"))
-_mb_jit = jax.jit(rounds.mb_round,
-                  static_argnames=("fixed", "kernel_backend"))
-_lloyd_jit = jax.jit(rounds.lloyd_round, static_argnames=("kernel_backend",))
+                     "plan", "data_axes"))
+_mb_jit = jax.jit(rounds.mb_round, static_argnames=("fixed", "plan"))
+_lloyd_jit = jax.jit(rounds.lloyd_round, static_argnames=("plan",))
 
 
 # rows fetched off a ChunkStore per device-buffer update: bounds the
@@ -78,6 +81,10 @@ class _LocalRun(EngineRun):
         self.n_active_target = N
         self.orig_index = perm        # storage row i holds X[perm[i]]
         self.n_points = N
+        # kernel dispatch: resolved ONCE for the fit at its maximum
+        # batch bucket; every round below threads this plan
+        self.kernel_plan = resolve_plan(config.kernel_backend, b=N,
+                                        k=config.k, d=self._Xd.shape[1])
         # mb/mbf resampling stream (paper footnote 1: cycle a reshuffle)
         self._mb_pos = 0
         self._mb_perm = rng.permutation(N)
@@ -109,11 +116,10 @@ class _LocalRun(EngineRun):
         return nested_jit(self._Xd, state, b=b, rho=self._config.rho,
                           bounds=self._config.bounds, capacity=capacity,
                           use_shalf=self._config.use_shalf,
-                          kernel_backend=self._config.kernel_backend)
+                          plan=self.kernel_plan)
 
     def lloyd_step(self, state):
-        return _lloyd_jit(self._Xd, state,
-                          kernel_backend=self._config.kernel_backend)
+        return _lloyd_jit(self._Xd, state, plan=self.kernel_plan)
 
     def mb_step(self, state, fixed):
         N, b = self.b_max, self.b
@@ -123,7 +129,7 @@ class _LocalRun(EngineRun):
         idx = jnp.asarray(self._mb_perm[self._mb_pos:self._mb_pos + b])
         self._mb_pos += b
         return _mb_jit(self._Xd, idx, state, fixed=fixed,
-                       kernel_backend=self._config.kernel_backend)
+                       plan=self.kernel_plan)
 
     def eval_mse(self, state):
         if self._Xv is None:

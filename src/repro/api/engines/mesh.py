@@ -108,6 +108,12 @@ class _MeshRun(EngineRun):
             idx = np.where(idx < N_real, idx, 0)
             C0 = (self._src.store.take(idx) if self._src is not None
                   else X[idx]).astype(np.float32)
+        # kernel dispatch: one plan for the fit, resolved at the
+        # per-shard batch bucket (the shapes the kernels actually see)
+        from repro.kernels.plan import resolve_plan
+        self.kernel_plan = resolve_plan(config.kernel_backend,
+                                        b=self.b_max, k=config.k,
+                                        d=self._dim)
         self.state = self._place_state(self._host_init_state(C0))
 
     # -- layout hooks (overridden by _XLRun / _MultiHostRun) ----------------
@@ -263,7 +269,7 @@ class _MeshRun(EngineRun):
             self._mesh, self._config.data_axes, b_local=b,
             rho=self._config.rho, bounds=self._config.bounds,
             capacity=capacity, use_shalf=self._config.use_shalf,
-            n_real=self._n_real)
+            n_real=self._n_real, plan=self.kernel_plan)
         return round_fn(self._Xd, state)
 
     def eval_mse(self, state):

@@ -53,8 +53,7 @@ class _XLRun(_MeshRun):
             model_axis=self._config.model_axis, b_local=b,
             rho=self._config.rho, bounds=self._config.bounds,
             capacity=capacity, use_shalf=self._config.use_shalf,
-            n_real=self._n_real,
-            kernel_backend=self._config.kernel_backend)
+            n_real=self._n_real, plan=self.kernel_plan)
         return round_fn(self._Xd, state)
 
 

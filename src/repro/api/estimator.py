@@ -215,11 +215,14 @@ class NestedKMeans:
                     state = dataclasses.replace(
                         state, stats=jax.tree.map(jnp.asarray,
                                                   self._stats))
+                from repro.kernels.plan import resolve_plan
+                plan = resolve_plan(cfg.kernel_backend,
+                                    b=int(X.shape[0]), k=cfg.k,
+                                    d=int(X.shape[1]))
                 new_state, info = nested_jit(
                     Xd, state, b=int(X.shape[0]), rho=cfg.rho,
                     bounds=cfg.bounds, capacity=None,
-                    use_shalf=cfg.use_shalf,
-                    kernel_backend=cfg.kernel_backend)
+                    use_shalf=cfg.use_shalf, plan=plan)
                 jax.block_until_ready(new_state.stats.C)
                 new_stats = new_state.stats
             else:

@@ -203,6 +203,10 @@ class FitOutcome:
     converged: bool
     algorithm: str
     config: FitConfig
+    #: the engine's resolved `KernelPlan` as a JSON-safe dict (backend,
+    #: block sizes, bucket, tuner provenance); benchmark manifests
+    #: record it so "which kernels actually ran" is never a null again
+    kernel_plan: Optional[Dict[str, Any]] = None
 
     @property
     def final_mse(self) -> float:
@@ -505,7 +509,9 @@ def run_loop(run: EngineRun, config: FitConfig, *,
     labels[run.orig_index[valid]] = a[valid]
 
     stats = run.fetch_stats(state)
+    plan = getattr(run, "kernel_plan", None)
     return FitOutcome(C=np.asarray(stats.C), state=state,
                       labels=labels, telemetry=telemetry,
                       converged=converged, algorithm=algorithm,
-                      config=config)
+                      config=config,
+                      kernel_plan=plan.to_dict() if plan else None)

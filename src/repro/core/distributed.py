@@ -78,8 +78,13 @@ def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
                        b_local: int, rho: float, bounds: str = "hamerly2",
                        capacity: Optional[int] = None,
                        use_shalf: bool = True,
-                       n_real: Optional[int] = None):
+                       n_real: Optional[int] = None,
+                       plan=None):
     """jit(shard_map(nested_round)) for one (b_local, capacity) bucket.
+
+    ``plan``: the fit's resolved `kernels.plan.KernelPlan` — hashable,
+    so it participates in this factory's lru_cache key exactly like the
+    bucket statics do.
 
     ``n_real``: global count of real (non-pad) rows. When it is not a
     multiple of the shard count, the interleaved placement leaves the
@@ -112,7 +117,8 @@ def make_sharded_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
         n_valid = per_shard_n_valid(data_axes, sizes, n_shards, n_real)
         return rounds.nested_round(
             Xs, st, b=b_local, rho=rho, bounds=bounds, capacity=capacity,
-            use_shalf=use_shalf, data_axes=data_axes, n_valid=n_valid)
+            use_shalf=use_shalf, plan=plan, data_axes=data_axes,
+            n_valid=n_valid)
 
     shardmapped = shard_map_compat(
         fn, mesh=mesh, in_specs=(P(data_axes, None), state_specs),
@@ -192,7 +198,7 @@ def _fold_top2(d1a, d2a, ia, d1b, d2b, ib):
 
 def assign_top2_sharded(x: jax.Array, C_local: jax.Array, *,
                         model_axis: str, k_offset: jax.Array,
-                        backend: Optional[str] = None):
+                        backend: Optional[str] = None, plan=None):
     """Top-2 nearest over model-sharded centroids (inside shard_map).
 
     Each model shard scans its (k_local, d) slice, then the per-shard
@@ -207,7 +213,8 @@ def assign_top2_sharded(x: jax.Array, C_local: jax.Array, *,
     boundary. Ties on the minimum distance resolve to the lowest global
     index, matching `jnp.argmin` on the unsharded centroid block.
     """
-    a_loc, d1_loc, d2_loc = ops.assign_top2(x, C_local, backend=backend)
+    a_loc, d1_loc, d2_loc = ops.assign_top2(x, C_local, plan=plan,
+                                            backend=backend)
     a_glob = a_loc + k_offset
     d1s = jax.lax.all_gather(d1_loc, model_axis)       # (m, b)
     d2s = jax.lax.all_gather(d2_loc, model_axis)

@@ -189,7 +189,7 @@ def _chunk_rows(arrs, *, m: int, model_axis: str):
 
 
 def _delta_sv_xl(x, a_prev, a_new, k: int, *, m: int, model_axis: str,
-                 data_axes: Tuple[str, ...], kernel_backend):
+                 data_axes: Tuple[str, ...], plan):
     """The nested S/v delta, reduced straight onto the k-shards.
 
     Weights follow `rounds._delta_sv` (remove expired, add current;
@@ -209,10 +209,9 @@ def _delta_sv_xl(x, a_prev, a_new, k: int, *, m: int, model_axis: str,
     an = jnp.clip(a_new, 0, k - 1)
     x_c, ap_c, an_c, w_rm_c, w_add_c = _chunk_rows(
         [x, ap, an, w_rm, w_add], m=m, model_axis=model_axis)
-    S_rm, v_rm = ops.cluster_sum(x_c, ap_c, k, weights=w_rm_c,
-                                 backend=kernel_backend)
+    S_rm, v_rm = ops.cluster_sum(x_c, ap_c, k, weights=w_rm_c, plan=plan)
     S_add, v_add = ops.cluster_sum(x_c, an_c, k, weights=w_add_c,
-                                   backend=kernel_backend)
+                                   plan=plan)
     dS = jax.lax.psum_scatter(S_add - S_rm, model_axis,
                               scatter_dimension=0, tiled=True)
     dv = jax.lax.psum_scatter(v_add - v_rm, model_axis,
@@ -243,7 +242,7 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
                     rho: float, bounds: str, m: int,
                     data_axes: Tuple[str, ...], model_axis: str,
                     capacity: Optional[int] = None, use_shalf: bool = True,
-                    kernel_backend: Optional[str] = None,
+                    plan=None,
                     n_valid: Optional[jax.Array] = None
                     ) -> Tuple[KMeansState, RoundInfo]:
     """One gb/tb round over the per-shard prefix ``X[:b]``, k sharded.
@@ -263,9 +262,10 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
     device.
     """
     # trace accounting (see repro.util.tracecount): one count per jit
-    # trace, keyed on the intended executable-cache statics
+    # trace, keyed on the intended executable-cache statics (the plan is
+    # constant per fit — a new static key, never a new bucket)
     tracecount.record("xl_nested_round", b=b, capacity=capacity, rho=rho,
-                      bounds=bounds)
+                      bounds=bounds, plan=plan)
     k_local = state.stats.C.shape[0]
     k = k_local * m
     C_local = state.stats.C
@@ -278,13 +278,31 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
 
     def assign_fn(xs):
         return assign_top2_sharded(xs, C_local, model_axis=model_axis,
-                                   k_offset=k_offset,
-                                   backend=kernel_backend)
+                                   k_offset=k_offset, plan=plan)
+
+    # a pallas plan routes the dense shapes through the single-pass
+    # fused kernel — but only at m == 1, where every model-axis
+    # collective (psum_scatter, all_gather, pmax) is the identity and
+    # the local k-slice IS the full centroid block. At m > 1 the
+    # sharded per-op kernels below remain the dispatch target.
+    fused = (plan is not None and plan.backend == "pallas" and m == 1
+             and (bounds == "none"
+                  or (bounds == "hamerly2"
+                      and (capacity is None or capacity >= b))))
+    fused_acc = None
 
     # the bound/compaction schedule itself lives ONLY in rounds.py; this
     # engine injects the four quantities that need model-axis
     # collectives, so the local and sharded paths cannot drift apart
-    if bounds == "none":
+    if fused:
+        p_max = (jax.lax.pmax(jnp.max(state.stats.p), model_axis)
+                 if bounds == "hamerly2" else None)
+        a_new, d_new, lb2, n_rec, overflow, fused_acc = \
+            rounds._fused_dense_round(x, state, a_prev, valid,
+                                      bounds=bounds, use_shalf=use_shalf,
+                                      plan=plan, p_max=p_max)
+        l_new = None
+    elif bounds == "none":
         a_new, d_new, lb2, n_rec, overflow, _ = rounds._assign_exhaustive(
             x, state, a_prev, valid, assign_top2_fn=assign_fn)
         l_new = None
@@ -296,7 +314,7 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
                   if use_shalf else None)
         a_new, d_new, lb2, n_rec, overflow, _ = rounds._assign_hamerly2(
             x, state, a_prev, valid, capacity=capacity,
-            use_shalf=use_shalf, kernel_backend=kernel_backend,
+            use_shalf=use_shalf, plan=plan,
             p_max=p_max, d_assigned=d_a, s_half=s_half,
             assign_top2_fn=assign_fn)
         l_new = None
@@ -318,11 +336,18 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
             # pads keep a stable zero bound (their lanes are dead)
             l_new = jnp.where(valid[:, None], l_new, 0.0)
 
-    dS, dv = _delta_sv_xl(x, a_prev, a_new, k, m=m, model_axis=model_axis,
-                          data_axes=data_axes,
-                          kernel_backend=kernel_backend)
-    sse = _refresh_sse_xl(d_new, a_new, k, m=m, model_axis=model_axis,
-                          data_axes=data_axes)
+    if fused_acc is not None:
+        # m == 1: the fused accumulators are already full-k; the model
+        # psum_scatter would be the identity, only the data psum remains
+        dS, dv, sse = fused_acc
+        if data_axes:
+            dS, dv, sse = jax.lax.psum((dS, dv, sse), data_axes)
+    else:
+        dS, dv = _delta_sv_xl(x, a_prev, a_new, k, m=m,
+                              model_axis=model_axis, data_axes=data_axes,
+                              plan=plan)
+        sse = _refresh_sse_xl(d_new, a_new, k, m=m, model_axis=model_axis,
+                              data_axes=data_axes)
     mse_num = jnp.sum(d_new * d_new)
     mse_den = (jnp.asarray(b, jnp.float32) if valid is None
                else jnp.sum(valid.astype(jnp.float32)))
@@ -395,13 +420,14 @@ def make_xl_nested_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
                          capacity: Optional[int] = None,
                          use_shalf: bool = True,
                          n_real: Optional[int] = None,
-                         kernel_backend: Optional[str] = None):
+                         plan=None):
     """jit(shard_map(xl_nested_round)) for one (b_local, capacity) bucket.
 
     The centroid-sharded analogue of `distributed.make_sharded_round`:
     same static-key bucketing (the host loop compiles one executable per
     power-of-two (b, capacity) pair), same per-shard ``n_valid``
     derivation from ``n_real`` — plus the model-axis stat sharding.
+    ``plan`` (the fit's resolved `KernelPlan`) joins the lru_cache key.
     """
     state_specs = xl_state_specs(data_axes, model_axis,
                                  elkan=(bounds == "elkan"))
@@ -418,8 +444,7 @@ def make_xl_nested_round(mesh: Mesh, data_axes: Tuple[str, ...], *,
         return xl_nested_round(
             Xs, st, b=b_local, rho=rho, bounds=bounds, m=m,
             data_axes=data_axes, model_axis=model_axis, capacity=capacity,
-            use_shalf=use_shalf, kernel_backend=kernel_backend,
-            n_valid=n_valid)
+            use_shalf=use_shalf, plan=plan, n_valid=n_valid)
 
     shardmapped = shard_map_compat(
         fn, mesh=mesh, in_specs=(P(data_axes, None), state_specs),

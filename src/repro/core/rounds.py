@@ -27,6 +27,7 @@ from repro.core import controller
 from repro.core.state import (ElkanBounds, KMeansState, RoundInfo,
                               centroid_update)
 from repro.kernels import ops, ref
+from repro.kernels.plan import KernelPlan
 from repro.util import tracecount
 
 
@@ -60,7 +61,7 @@ def _segment_scalar(vals: jax.Array, ids: jax.Array, k: int,
 
 
 def _delta_sv(x: jax.Array, a_prev: jax.Array, a_new: jax.Array, k: int,
-              kernel_backend: Optional[str]):
+              plan: Optional[KernelPlan]):
     """The mb-f / nested S,v delta: remove expired, add current. Returns
     (dS, dv) so callers can psum the delta across data shards before
     applying it to the replicated stats. Rows with ``a_new == -1``
@@ -73,9 +74,8 @@ def _delta_sv(x: jax.Array, a_prev: jax.Array, a_new: jax.Array, k: int,
         .astype(jnp.float32)
     a_new = jnp.clip(a_new, 0, k - 1)
     S_rm, v_rm = ops.cluster_sum(x, jnp.clip(a_prev, 0, k - 1), k,
-                                 weights=w_rm, backend=kernel_backend)
-    S_add, v_add = ops.cluster_sum(x, a_new, k, weights=w_add,
-                                   backend=kernel_backend)
+                                 weights=w_rm, plan=plan)
+    S_add, v_add = ops.cluster_sum(x, a_new, k, weights=w_add, plan=plan)
     return S_add - S_rm, v_add - v_rm
 
 
@@ -89,15 +89,14 @@ def _refresh_sse(d_act: jax.Array, a_act: jax.Array, k: int) -> jax.Array:
 # --------------------------------------------------------------------------
 
 def lloyd_round(X: jax.Array, state: KMeansState, *,
-                kernel_backend: Optional[str] = None
+                plan: Optional[KernelPlan] = None
                 ) -> Tuple[KMeansState, RoundInfo]:
     """Exact Lloyd iteration: full reassignment + fresh means."""
     k = state.stats.C.shape[0]
     n = X.shape[0]
-    a_new, d1sq, _ = ops.assign_top2(X, state.stats.C,
-                                     backend=kernel_backend)
+    a_new, d1sq, _ = ops.assign_top2(X, state.stats.C, plan=plan)
     d = _euclid(d1sq)
-    S, v = ops.cluster_sum(X, a_new, k, backend=kernel_backend)
+    S, v = ops.cluster_sum(X, a_new, k, plan=plan)
     sse = _refresh_sse(d, a_new, k)
     stats = centroid_update(dataclasses.replace(
         state.stats, S=S, v=v, sse=sse))
@@ -120,7 +119,7 @@ def lloyd_round(X: jax.Array, state: KMeansState, *,
 # --------------------------------------------------------------------------
 
 def mb_round(X: jax.Array, idx: jax.Array, state: KMeansState, *,
-             fixed: bool, kernel_backend: Optional[str] = None
+             fixed: bool, plan: Optional[KernelPlan] = None
              ) -> Tuple[KMeansState, RoundInfo]:
     """One round of mb (Alg. 8 S/v form) or mb-f (Alg. 4, fixed=True).
 
@@ -131,20 +130,19 @@ def mb_round(X: jax.Array, idx: jax.Array, state: KMeansState, *,
     k = state.stats.C.shape[0]
     b = idx.shape[0]
     x = X[idx]
-    a_new, d1sq, _ = ops.assign_top2(x, state.stats.C,
-                                     backend=kernel_backend)
+    a_new, d1sq, _ = ops.assign_top2(x, state.stats.C, plan=plan)
     d = _euclid(d1sq)
 
     if fixed:
         a_prev = state.points.a[idx]
-        dS, dv = _delta_sv(x, a_prev, a_new, k, kernel_backend)
+        dS, dv = _delta_sv(x, a_prev, a_new, k, plan)
         stats = dataclasses.replace(state.stats, S=state.stats.S + dS,
                                     v=state.stats.v + dv)
         n_changed = jnp.sum(((a_prev >= 0) & (a_new != a_prev))
                             .astype(jnp.int32))
     else:
         # plain mb never removes: every (re)assignment accumulates forever
-        S_add, v_add = ops.cluster_sum(x, a_new, k, backend=kernel_backend)
+        S_add, v_add = ops.cluster_sum(x, a_new, k, plan=plan)
         stats = dataclasses.replace(state.stats, S=state.stats.S + S_add,
                                     v=state.stats.v + v_add)
         n_changed = jnp.asarray(b, jnp.int32)
@@ -166,15 +164,15 @@ def mb_round(X: jax.Array, idx: jax.Array, state: KMeansState, *,
     return new_state, info
 
 
-def mbf_round(X, idx, state, *, kernel_backend=None):
-    return mb_round(X, idx, state, fixed=True, kernel_backend=kernel_backend)
+def mbf_round(X, idx, state, *, plan=None):
+    return mb_round(X, idx, state, fixed=True, plan=plan)
 
 
 # --------------------------------------------------------------------------
 # Nested (grow-batch) rounds: gb-rho / tb-rho
 # --------------------------------------------------------------------------
 
-def _assign_exhaustive(x, state, a_prev, valid, *, kernel_backend=None,
+def _assign_exhaustive(x, state, a_prev, valid, *, plan=None,
                        assign_top2_fn=None):
     """bounds='none': full top-2 for every active point.
 
@@ -182,8 +180,7 @@ def _assign_exhaustive(x, state, a_prev, valid, *, kernel_backend=None,
     collective top-2 (`distributed_xl`); the schedule stays identical.
     """
     if assign_top2_fn is None:
-        a_new, d1sq, d2sq = ops.assign_top2(x, state.stats.C,
-                                            backend=kernel_backend)
+        a_new, d1sq, d2sq = ops.assign_top2(x, state.stats.C, plan=plan)
     else:
         a_new, d1sq, d2sq = assign_top2_fn(x)
     n_rec = (jnp.asarray(x.shape[0], jnp.int32) if valid is None
@@ -192,8 +189,71 @@ def _assign_exhaustive(x, state, a_prev, valid, *, kernel_backend=None,
             jnp.asarray(False), None)
 
 
+def _hamerly_settled(x, state, a_prev, valid, *, use_shalf: bool,
+                     p_max=None, d_assigned=None, s_half=None):
+    """The Hamerly bound DECISIONS for one round's active slice.
+
+    Factored out of `_assign_hamerly2` so the fused pallas round can
+    reuse the decisions verbatim: whatever backend executes the
+    assignment, the settled mask — and therefore the bound/compaction
+    schedule — comes from this one function.
+
+    Returns (settled, lb_dec, d_a, n_need).
+    """
+    C = state.stats.C
+    b = x.shape[0]
+    seen = a_prev >= 0
+    if p_max is None:
+        p_max = jnp.max(state.stats.p)
+    lb_dec = state.points.lb[:b] - p_max
+    d_a = (_dist_to_assigned(x, C, a_prev) if d_assigned is None
+           else d_assigned)
+    thresh = lb_dec
+    if use_shalf:
+        if s_half is None:
+            s_half = _half_intercentroid(C)
+        thresh = jnp.maximum(lb_dec, s_half[jnp.clip(a_prev, 0, None)])
+    settled = seen & (d_a <= thresh)
+    if valid is not None:
+        # masked structural pads never need recompute; their outputs are
+        # forced back to the never-assigned sentinel by the caller
+        settled = settled | ~valid
+    n_need = jnp.sum((~settled).astype(jnp.int32))
+    return settled, lb_dec, d_a, n_need
+
+
+def _fused_dense_round(x, state, a_prev, valid, *, bounds: str,
+                       use_shalf: bool, plan: KernelPlan,
+                       p_max=None, d_assigned=None, s_half=None):
+    """Route the dense assignment through `ops.fused_nested_round`.
+
+    One pass over x replaces the assign / delta-S/v / sse triple-read
+    when the plan picked pallas. Only the DENSE shapes go here (gb, or
+    tb with capacity covering the batch); the compacted tb path keeps
+    the separate kernels because its gather/scatter breaks the
+    single-sweep structure. Returns the `_assign_*` 6-tuple plus the
+    fused (dS, dv, sse) accumulators via the normally-unused last slot.
+    """
+    b = x.shape[0]
+    if bounds == "hamerly2":
+        settled, lb_dec, d_a, n_rec = _hamerly_settled(
+            x, state, a_prev, valid, use_shalf=use_shalf, p_max=p_max,
+            d_assigned=d_assigned, s_half=s_half)
+    else:                               # bounds == "none"
+        settled = jnp.zeros((b,), jnp.bool_)
+        lb_dec = jnp.zeros((b,), jnp.float32)
+        d_a = jnp.zeros((b,), jnp.float32)
+        n_rec = (jnp.asarray(b, jnp.int32) if valid is None
+                 else jnp.sum(valid.astype(jnp.int32)))
+    vmask = jnp.ones((b,), jnp.bool_) if valid is None else valid
+    a_new, d_new, lb_new, dS, dv, sse = ops.fused_nested_round(
+        x, state.stats.C, a_prev, settled, d_a, lb_dec, vmask, plan=plan)
+    return (a_new, d_new, lb_new, n_rec.astype(jnp.int32),
+            jnp.asarray(False), (dS, dv, sse))
+
+
 def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
-                     use_shalf: bool, kernel_backend,
+                     use_shalf: bool, plan=None,
                      p_max=None, d_assigned=None, s_half=None,
                      assign_top2_fn=None):
     """TPU-native bounding: exact-refresh upper + decayed 2nd-nearest lower.
@@ -219,27 +279,13 @@ def _assign_hamerly2(x, state, a_prev, valid, *, capacity: Optional[int],
     """
     C = state.stats.C
     b = x.shape[0]
-    seen = a_prev >= 0
-    if p_max is None:
-        p_max = jnp.max(state.stats.p)
     if assign_top2_fn is None:
         def assign_top2_fn(xs):
-            return ops.assign_top2(xs, C, backend=kernel_backend)
-    lb_dec = state.points.lb[:b] - p_max
-    d_a = (_dist_to_assigned(x, C, a_prev) if d_assigned is None
-           else d_assigned)
-    thresh = lb_dec
-    if use_shalf:
-        if s_half is None:
-            s_half = _half_intercentroid(C)
-        thresh = jnp.maximum(lb_dec, s_half[jnp.clip(a_prev, 0, None)])
-    settled = seen & (d_a <= thresh)
-    if valid is not None:
-        # masked structural pads never need recompute; their outputs are
-        # forced back to the never-assigned sentinel by the caller
-        settled = settled | ~valid
+            return ops.assign_top2(xs, C, plan=plan)
+    settled, lb_dec, d_a, n_need = _hamerly_settled(
+        x, state, a_prev, valid, use_shalf=use_shalf, p_max=p_max,
+        d_assigned=d_assigned, s_half=s_half)
     needs = ~settled
-    n_need = jnp.sum(needs.astype(jnp.int32))
 
     if capacity is None or capacity >= b:
         a_full, d1sq, d2sq = assign_top2_fn(x)
@@ -309,7 +355,7 @@ def _assign_elkan(x, state, a_prev, valid, *, b: int):
 def nested_round(X: jax.Array, state: KMeansState, *, b: int,
                  rho: float, bounds: str = "hamerly2",
                  capacity: Optional[int] = None, use_shalf: bool = True,
-                 kernel_backend: Optional[str] = None,
+                 plan: Optional[KernelPlan] = None,
                  data_axes: Tuple[str, ...] = (),
                  n_valid: Optional[jax.Array] = None
                  ) -> Tuple[KMeansState, RoundInfo]:
@@ -332,24 +378,39 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
     S/v/sse/mse, and are excluded from n_active/n_changed. This is how a
     shard whose real-row count is not a multiple of the shard count caps
     ``b`` against its own real rows while b stays a shared static.
+
+    ``plan``: the fit's resolved `KernelPlan` (hashable, constant per
+    fit — engines pass it as a jit STATIC). A pallas plan routes the
+    dense gb/tb shapes through the single-pass fused kernel.
     """
     # trace accounting: this body runs once per jit trace; the statics
     # here ARE the intended executable-cache key (repro.analysis.retrace
-    # asserts the trace count never exceeds the pow2 bucket count)
+    # asserts the trace count never exceeds the pow2 bucket count — the
+    # plan is constant for a fit, so it widens no bucket)
     tracecount.record("nested_round", b=b, capacity=capacity, rho=rho,
-                      bounds=bounds)
+                      bounds=bounds, plan=plan)
     k = state.stats.C.shape[0]
     x = X[:b]
     a_prev = state.points.a[:b]
     valid = None if n_valid is None else jnp.arange(b) < n_valid
 
-    if bounds == "none":
+    fused = (plan is not None and plan.backend == "pallas"
+             and (bounds == "none"
+                  or (bounds == "hamerly2"
+                      and (capacity is None or capacity >= b))))
+    fused_acc = None
+    if fused:
+        a_new, d_new, lb2, n_rec, overflow, fused_acc = \
+            _fused_dense_round(x, state, a_prev, valid, bounds=bounds,
+                               use_shalf=use_shalf, plan=plan)
+        l_new = None
+    elif bounds == "none":
         a_new, d_new, lb2, n_rec, overflow, l_new = _assign_exhaustive(
-            x, state, a_prev, valid, kernel_backend=kernel_backend)
+            x, state, a_prev, valid, plan=plan)
     elif bounds == "hamerly2":
         a_new, d_new, lb2, n_rec, overflow, l_new = _assign_hamerly2(
             x, state, a_prev, valid, capacity=capacity,
-            use_shalf=use_shalf, kernel_backend=kernel_backend)
+            use_shalf=use_shalf, plan=plan)
     elif bounds == "elkan":
         a_new, d_new, lb2, n_rec, overflow, l_new = \
             _assign_elkan(x, state, a_prev, valid, b=b)
@@ -357,6 +418,7 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
         raise ValueError(f"unknown bounds {bounds!r}")
 
     if valid is not None:
+        # idempotent on the fused path (the kernel already masked)
         a_new = jnp.where(valid, a_new, jnp.int32(-1))
         d_new = jnp.where(valid, d_new, 0.0)
         if lb2 is not None:
@@ -365,8 +427,11 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
             # pads keep a stable zero bound (their lanes are dead)
             l_new = jnp.where(valid[:, None], l_new, 0.0)
 
-    dS, dv = _delta_sv(x, a_prev, a_new, k, kernel_backend)
-    sse = _refresh_sse(d_new, a_new, k)
+    if fused_acc is not None:
+        dS, dv, sse = fused_acc
+    else:
+        dS, dv = _delta_sv(x, a_prev, a_new, k, plan)
+        sse = _refresh_sse(d_new, a_new, k)
     mse_num = jnp.sum(d_new * d_new)
     mse_den = (jnp.asarray(b, jnp.float32) if valid is None
                else jnp.sum(valid.astype(jnp.float32)))

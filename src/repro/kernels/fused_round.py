@@ -145,3 +145,186 @@ def fused_round_ref(x: jax.Array, c: jax.Array):
     S, v = ref.cluster_sum_ref(x, a, k)
     sse = jax.ops.segment_sum(d1, a, num_segments=k)
     return a, d1, d2nd, S, v, sse
+
+
+def _nested_kernel(x_ref, c_ref, cn_ref, ap_ref, keep_ref, dk_ref,
+                   lbk_ref, vm_ref, a_ref, d_ref, lb_ref, s_ref, v_ref,
+                   sse_ref, *, k: int):
+    """One tile of the fused NESTED round (see `fused_nested_round_pallas`).
+
+    The Hamerly bound DECISIONS arrive pre-made as the ``keep`` mask —
+    the kernel only executes them, so the growth/bound schedule is
+    identical between backends by construction. For kept rows the
+    retained distance/bound (dk/lbk) pass straight through; everyone
+    still pays the scores matmul because the dense nested path refreshes
+    the second-closest bound for all rows each round.
+    """
+    n_idx = pl.program_id(0)
+
+    x = x_ref[...].astype(jnp.float32)            # (bn, d)
+    c = c_ref[...].astype(jnp.float32)            # (kp, d) VMEM-resident
+    cn = cn_ref[...].astype(jnp.float32)          # (kp,) +inf on pads
+    ap = ap_ref[...]                              # (bn,) prev assignment
+    keep = keep_ref[...] != 0                     # settled: keep a_prev
+    vm = vm_ref[...] != 0                         # valid (un-padded) rows
+
+    # Full squared distances — the REF expression (xn - 2x·c + cn,
+    # clamped), not the partial-distance trick of `_round_kernel`: label
+    # parity with the ref round path is the contract here, and the two
+    # expressions round differently at ties.
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    dot = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    d2m = jnp.maximum(xn - 2.0 * dot + cn[None, :], 0.0)
+
+    af = jnp.argmin(d2m, axis=1).astype(jnp.int32)
+    b1 = jnp.min(d2m, axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, d2m.shape, 1)
+    b2 = jnp.min(jnp.where(cols == af[:, None], jnp.inf, d2m), axis=1)
+    d1 = jnp.sqrt(b1)
+    d2 = jnp.sqrt(b2)
+
+    a_new = jnp.where(vm, jnp.where(keep, ap, af), -1)
+    d_new = jnp.where(vm, jnp.where(keep, dk_ref[...], d1), 0.0)
+    lb_new = jnp.where(vm, jnp.where(keep, lbk_ref[...], d2), 0.0)
+    a_ref[...] = a_new
+    d_ref[...] = d_new
+    lb_ref[...] = lb_new
+
+    # delta-S/v for already-seen points (rounds._delta_sv semantics),
+    # folded into ONE matmul via a signed coefficient matrix: +1 at the
+    # new cluster for joins, -1 at the old cluster for leaves. Masked
+    # rows (a_new == -1) and grid pads carry zero coefficients, so no
+    # post-hoc pad correction is needed.
+    seen = ap >= 0
+    changed = seen & (a_new != ap)
+    w_rm = jnp.where(changed, 1.0, 0.0)
+    w_add = jnp.where((changed | ~seen) & (a_new >= 0), 1.0, 0.0)
+    add_oh = (cols == jnp.clip(a_new, 0, k - 1)[:, None]).astype(
+        jnp.float32)
+    rm_oh = (cols == jnp.clip(ap, 0, k - 1)[:, None]).astype(jnp.float32)
+    coeff = w_add[:, None] * add_oh - w_rm[:, None] * rm_oh   # (bn, kp)
+    s_part = jax.lax.dot_general(coeff, x, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    v_part = jnp.sum(coeff, axis=0)
+    sse_part = jnp.sum(add_oh * (d_new * d_new)[:, None], axis=0)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        s_ref[...] = s_part
+        v_ref[...] = v_part
+        sse_ref[...] = sse_part
+
+    @pl.when(n_idx != 0)
+    def _acc():
+        s_ref[...] += s_part
+        v_ref[...] += v_part
+        sse_ref[...] += sse_part
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def fused_nested_round_pallas(x: jax.Array, c: jax.Array,
+                              a_prev: jax.Array, settled: jax.Array,
+                              d_keep: jax.Array, lb_keep: jax.Array,
+                              valid: jax.Array, *, bn: int = 256,
+                              interpret: bool = False):
+    """Fused nested-prefix round: assign + Hamerly keep-select +
+    delta-S/v + sse in ONE pass over x.
+
+    Inputs beyond (x, c): the previous assignment, the pre-computed
+    ``settled`` mask (rows whose Hamerly s/2 / lower bound proved the
+    assignment cannot change), the retained EUCLIDEAN distance and
+    decayed lower bound for settled rows, and the valid-row mask.
+
+    Returns (a_new, d_new, lb_new, dS, dv, sse): post-mask assignments
+    (-1 on invalid rows), euclidean distance to the assigned centroid,
+    the refreshed second-closest lower bound, the signed delta cluster
+    sums/counts for seen points, and per-cluster sse of active members.
+    """
+    n, d = x.shape
+    k = c.shape[0]
+    kp = k + (-k % 128)
+    cf = c.astype(jnp.float32)
+    cn = jnp.sum(cf ** 2, axis=1)
+    if kp != k:
+        cf = jnp.pad(cf, ((0, kp - k), (0, 0)))
+        cn = jnp.pad(cn, (0, kp - k), constant_values=jnp.inf)
+    n_pad = -n % bn
+    settled = settled.astype(jnp.int32)
+    valid = valid.astype(jnp.int32)
+    if n_pad:
+        # pad rows: a_prev=-1 (unseen) + valid=0 ⇒ every coefficient and
+        # sse term is zero; outputs are sliced off below.
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+        a_prev = jnp.pad(a_prev, (0, n_pad), constant_values=-1)
+        settled = jnp.pad(settled, (0, n_pad), constant_values=1)
+        d_keep = jnp.pad(d_keep, (0, n_pad))
+        lb_keep = jnp.pad(lb_keep, (0, n_pad))
+        valid = jnp.pad(valid, (0, n_pad))
+    np_ = x.shape[0]
+
+    kernel = functools.partial(_nested_kernel, k=k)
+    a, dn, lb, S, v, sse = pl.pallas_call(
+        kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),
+            pl.BlockSpec((kp,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),
+            pl.BlockSpec((kp,), lambda i: (0,)),
+            pl.BlockSpec((kp,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x, cf, cn, a_prev, settled, d_keep, lb_keep, valid)
+    return a[:n], dn[:n], lb[:n], S[:k], v[:k], sse[:k]
+
+
+def fused_nested_round_ref(x: jax.Array, c: jax.Array, a_prev: jax.Array,
+                           settled: jax.Array, d_keep: jax.Array,
+                           lb_keep: jax.Array, valid: jax.Array):
+    """Pure-jnp oracle mirroring the ref round path op for op."""
+    from repro.kernels import ref
+
+    k = c.shape[0]
+    af, d1sq, d2sq = ref.assign_top2_ref(x, c)
+    d1 = jnp.sqrt(jnp.maximum(d1sq, 0.0))
+    d2 = jnp.sqrt(jnp.maximum(d2sq, 0.0))
+    settled = settled.astype(bool)
+    valid = valid.astype(bool)
+    a_new = jnp.where(valid, jnp.where(settled, a_prev, af),
+                      -1).astype(jnp.int32)
+    d_new = jnp.where(valid, jnp.where(settled, d_keep, d1), 0.0)
+    lb_new = jnp.where(valid, jnp.where(settled, lb_keep, d2), 0.0)
+    seen = a_prev >= 0
+    changed = seen & (a_new != a_prev)
+    w_rm = jnp.where(changed, 1.0, 0.0).astype(jnp.float32)
+    w_add = jnp.where((changed | ~seen) & (a_new >= 0),
+                      1.0, 0.0).astype(jnp.float32)
+    S_rm, v_rm = ref.cluster_sum_ref(x, jnp.clip(a_prev, 0, k - 1), k,
+                                     weights=w_rm)
+    S_add, v_add = ref.cluster_sum_ref(x, jnp.clip(a_new, 0, k - 1), k,
+                                       weights=w_add)
+    sse = jax.ops.segment_sum(d_new * d_new, jnp.clip(a_new, 0, k - 1),
+                              num_segments=k)
+    return (a_new, d_new, lb_new, S_add - S_rm, v_add - v_rm, sse)

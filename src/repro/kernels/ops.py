@@ -1,9 +1,14 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public kernel ops, dispatched through a resolved `KernelPlan`.
 
-On non-TPU backends (this container) the kernels run in interpret mode so
-the kernel bodies execute exactly as written; on TPU they compile to Mosaic.
-``backend="ref"`` routes to the pure-jnp oracle (used for tiny shapes where
-padding to MXU tiles would dominate, and as the semantic fallback).
+Engines resolve a plan ONCE per fit (`plan.resolve_plan`) and pass it
+down; every op here takes ``plan=`` and launches accordingly. Legacy
+callers that still hold a backend STRING (serve snapshots,
+`NestedKMeans.predict`) pass ``backend=`` instead and get a per-bucket
+cached plan resolved on the spot — same dispatch rules, no second code
+path. On non-TPU platforms (this container) pallas runs in interpret
+mode so the kernel bodies execute exactly as written; on TPU they
+compile to Mosaic. ``"ref"`` routes to the pure-jnp oracle — the fast
+path on CPU and the semantic baseline everywhere.
 """
 from __future__ import annotations
 
@@ -11,44 +16,75 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.cluster_sum import cluster_sum_pallas
+from repro.kernels.fused_round import (fused_nested_round_pallas,
+                                       fused_nested_round_ref)
 from repro.kernels.kmeans_assign import assign_top2_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _auto_backend(n: int, k: int) -> str:
-    if _on_tpu():
-        return "pallas"
-    # interpret-mode pallas is a python-level emulation: correct but slow.
-    # On CPU the oracle IS the fast path; pallas stays available for
-    # explicit kernel validation.
-    return "ref"
-
-
-def assign_top2(x: jax.Array, c: jax.Array, *, backend: str | None = None,
-                bn: int = 256, bk: int = 128):
-    """(a, d1_sq, d2_sq): nearest / 2nd-nearest squared distances."""
-    n, k = x.shape[0], c.shape[0]
-    backend = backend or _auto_backend(n, k)
-    if backend == "ref":
-        return ref.assign_top2_ref(x, c)
-    return assign_top2_pallas(x, c, bn=bn, bk=min(bk, _pad128(k)),
-                              interpret=not _on_tpu())
-
-
-def cluster_sum(x: jax.Array, a: jax.Array, k: int, *,
-                weights: jax.Array | None = None,
-                backend: str | None = None, bn: int = 256, bd: int = 256):
-    """Weighted per-cluster sums S (k,d) and counts v (k,)."""
-    backend = backend or _auto_backend(x.shape[0], k)
-    if backend == "ref":
-        return ref.cluster_sum_ref(x, a, k, weights=weights)
-    s, v = cluster_sum_pallas(x, a, _pad128(k), weights=weights, bn=bn,
-                              bd=bd, interpret=not _on_tpu())
-    return s[:k], v[:k]
+from repro.kernels.plan import KernelPlan, next_pow2, resolve_plan
 
 
 def _pad128(k: int) -> int:
     return k + (-k % 128)
+
+
+def _plan_for(plan: KernelPlan | None, backend: str | None, n: int,
+              k: int, d: int) -> KernelPlan:
+    """A resolved plan wins; otherwise resolve one from the legacy
+    backend string (or None = auto) at this call's shape bucket."""
+    if plan is not None:
+        return plan
+    return resolve_plan(backend, b=n, k=k, d=d)
+
+
+def _clamp_bn(bn: int, n: int) -> int:
+    """Row tile no larger than the (pow2-padded) batch: a plan tuned at
+    b_max still launches sane grids for the small early nested rounds."""
+    return max(8, min(bn, next_pow2(n)))
+
+
+def assign_top2(x: jax.Array, c: jax.Array, *,
+                plan: KernelPlan | None = None,
+                backend: str | None = None):
+    """(a, d1_sq, d2_sq): nearest / 2nd-nearest squared distances."""
+    n, k = x.shape[0], c.shape[0]
+    p = _plan_for(plan, backend, n, k, x.shape[1])
+    if p.backend == "ref":
+        return ref.assign_top2_ref(x, c)
+    return assign_top2_pallas(x, c, bn=_clamp_bn(p.bn, n),
+                              bk=min(p.bk, _pad128(k)),
+                              interpret=p.interpret)
+
+
+def cluster_sum(x: jax.Array, a: jax.Array, k: int, *,
+                weights: jax.Array | None = None,
+                plan: KernelPlan | None = None,
+                backend: str | None = None):
+    """Weighted per-cluster sums S (k,d) and counts v (k,)."""
+    p = _plan_for(plan, backend, x.shape[0], k, x.shape[1])
+    if p.backend == "ref":
+        return ref.cluster_sum_ref(x, a, k, weights=weights)
+    s, v = cluster_sum_pallas(x, a, _pad128(k), weights=weights,
+                              bn=_clamp_bn(p.bn, x.shape[0]), bd=p.bd,
+                              interpret=p.interpret)
+    return s[:k], v[:k]
+
+
+def fused_nested_round(x: jax.Array, c: jax.Array, a_prev: jax.Array,
+                       settled: jax.Array, d_keep: jax.Array,
+                       lb_keep: jax.Array, valid: jax.Array, *,
+                       plan: KernelPlan | None = None):
+    """Fused nested-round pass: assign + Hamerly keep-select + delta-S/v
+    + sse in one sweep over x (see `fused_round.fused_nested_round_pallas`).
+
+    Bound DECISIONS (the ``settled`` mask) stay with the caller
+    (`core.rounds`) so the growth/bound schedule cannot drift between
+    backends; this op only executes them.
+    """
+    n, k = x.shape[0], c.shape[0]
+    p = _plan_for(plan, None, n, k, x.shape[1])
+    if p.backend == "ref":
+        return fused_nested_round_ref(x, c, a_prev, settled, d_keep,
+                                      lb_keep, valid)
+    return fused_nested_round_pallas(x, c, a_prev, settled, d_keep,
+                                     lb_keep, valid,
+                                     bn=_clamp_bn(p.bn, n),
+                                     interpret=p.interpret)

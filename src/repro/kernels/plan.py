@@ -1,0 +1,199 @@
+"""Kernel dispatch plane: one resolved `KernelPlan` per fit.
+
+`kernel_backend` used to be a raw string threaded through every round
+helper, with a per-call `_auto_backend` default buried in `ops.py`.
+This module replaces that with a single resolution step: an engine (or
+`ops` itself, for legacy string callers) calls `resolve_plan` ONCE and
+threads the frozen result everywhere a kernel is launched.
+
+The plan is keyed on the (b, k, d) **pow2 bucket lattice** — the same
+lattice `api.loop` uses for jit cache buckets — so a fit whose nested
+batch doubles through b0, 2*b0, ... N shares one plan for the whole
+trajectory (the bucket is taken at b_max). Because `KernelPlan` is a
+frozen dataclass it is hashable with a stable repr, which lets the
+engines put it straight into `jax.jit` static args and into
+`util.tracecount` statics without widening the retrace auditor's
+bucket key.
+
+Block sizes (bn rows / bk centroid cols / bd feature cols) come from a
+per-bucket autotuner cached under ``artifacts/tune/`` — gated by the
+``REPRO_TUNE_KERNELS`` env var because measuring candidates costs real
+wall time — with a deterministic fallback table when tuning is off and
+no cache entry exists. The table is what CI exercises; tuning can only
+ever change performance, never results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+_TUNE_ENV = "REPRO_TUNE_KERNELS"
+_TUNE_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "tune"
+
+#: tuner candidate grid — small on purpose: 12 timed points per bucket.
+_CANDIDATES = tuple((bn, bk, bd)
+                    for bn in (128, 256, 512)
+                    for bk in (128, 256)
+                    for bd in (128, 256))
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Resolved kernel dispatch for one fit.
+
+    Frozen + hashable: engines pass the plan through jit static args,
+    so everything here must be decided before tracing and constant for
+    the fit's lifetime.
+    """
+
+    backend: str                    # "ref" | "pallas"
+    interpret: bool                 # pallas interpret mode (non-TPU)
+    bn: int                         # rows per point tile
+    bk: int                         # centroid columns per assign tile
+    bd: int                         # feature columns per cluster-sum tile
+    bucket: Tuple[int, int, int]    # pow2 (b, k, d) lattice cell
+    source: str                     # "table" | "tuned" | "cached"
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON form for benchmark manifests / FitOutcome."""
+        return {"backend": self.backend, "interpret": self.interpret,
+                "bn": self.bn, "bk": self.bk, "bd": self.bd,
+                "bucket": list(self.bucket), "source": self.source}
+
+
+def _table_blocks(bucket: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Deterministic fallback block sizes for a bucket.
+
+    bn tracks the batch bucket (capped at 512 so a huge fit still tiles
+    X), bk is one MXU lane tile, bd widens for high-dimensional data so
+    the cluster-sum grid does not degenerate into tiny feature strips.
+    """
+    bp2, _kp2, dp2 = bucket
+    bn = min(512, max(8, bp2))
+    bk = 128
+    bd = 256 if dp2 >= 256 else 128
+    return bn, bk, bd
+
+
+def _cache_path(platform: str, bucket: Tuple[int, int, int]) -> Path:
+    b, k, d = bucket
+    return _TUNE_DIR / f"{platform}-b{b}-k{k}-d{d}.json"
+
+
+def _tune_blocks(platform: str,
+                 bucket: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Time the candidate grid on bucket-shaped synthetic data.
+
+    Sizes are clamped so interpret-mode tuning on CPU stays in seconds;
+    the measured op mix (assign + cluster-sum) is the nested round's
+    inner loop, so the argmin transfers.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.cluster_sum import cluster_sum_pallas
+    from repro.kernels.kmeans_assign import assign_top2_pallas
+
+    bp2, kp2, dp2 = bucket
+    n = int(min(bp2, 2048))
+    k = int(min(kp2, 512))
+    d = int(min(dp2, 512))
+    kp = k + (-k % 128)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    a = jnp.asarray(rng.integers(0, k, size=n), jnp.int32)
+    interpret = platform != "tpu"
+
+    best: Optional[Tuple[float, int, int, int]] = None
+    for bn, bk, bd in _CANDIDATES:
+        bn_eff = max(8, min(bn, next_pow2(n)))
+
+        def run() -> None:
+            out = assign_top2_pallas(x, c, bn=bn_eff, bk=min(bk, kp),
+                                     interpret=interpret)
+            sums = cluster_sum_pallas(x, a, kp, bn=bn_eff, bd=bd,
+                                      interpret=interpret)
+            jax.block_until_ready((out, sums))
+
+        run()                                    # compile / warm
+        t0 = time.perf_counter()
+        run()
+        dt = time.perf_counter() - t0
+        if best is None or dt < best[0]:
+            best = (dt, bn, bk, bd)
+    assert best is not None
+    return best[1], best[2], best[3]
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_cached(kernel_backend: Optional[str],
+                    bucket: Tuple[int, int, int],
+                    platform: str, tune: bool) -> KernelPlan:
+    from repro.util.env import apply_kernel_flags
+
+    # Satellite of the dispatch refactor: the env-module flag shaping is
+    # applied on the SAME path that decides to launch kernels, so a fit
+    # that resolves a plan gets the platform's XLA flags without its
+    # launcher having called set_platform.
+    apply_kernel_flags(platform)
+
+    backend = kernel_backend or ("pallas" if platform == "tpu" else "ref")
+    bn, bk, bd = _table_blocks(bucket)
+    source = "table"
+    path = _cache_path(platform, bucket)
+    if path.is_file():
+        try:
+            blob = json.loads(path.read_text())
+            bn, bk, bd = int(blob["bn"]), int(blob["bk"]), int(blob["bd"])
+            source = "cached"
+        except (ValueError, KeyError, OSError):
+            pass                    # unreadable cache entry → table
+    elif tune:
+        bn, bk, bd = _tune_blocks(platform, bucket)
+        source = "tuned"
+        try:
+            _TUNE_DIR.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(
+                {"platform": platform, "bucket": list(bucket),
+                 "bn": bn, "bk": bk, "bd": bd}, sort_keys=True) + "\n")
+        except OSError:
+            pass                    # read-only checkout: keep the result
+    return KernelPlan(backend=backend, interpret=(platform != "tpu"),
+                      bn=bn, bk=bk, bd=bd, bucket=bucket, source=source)
+
+
+def resolve_plan(kernel_backend: Optional[str] = None, *, b: int, k: int,
+                 d: int, platform: Optional[str] = None,
+                 tune: Optional[bool] = None) -> KernelPlan:
+    """Resolve ``config.kernel_backend`` into a per-fit `KernelPlan`.
+
+    Call once per fit with the fit's maximum batch (b), k and d; the
+    result is cached per (backend, bucket, platform), so the legacy
+    per-call path through `ops` pays only a dict lookup.
+
+      kernel_backend  None (auto: pallas iff TPU) | "ref" | "pallas"
+      platform        defaults to ``jax.default_backend()``
+      tune            defaults to the ``REPRO_TUNE_KERNELS`` env var
+    """
+    if kernel_backend not in (None, "ref", "pallas"):
+        raise ValueError(f"unknown kernel_backend {kernel_backend!r}")
+    if platform is None:
+        import jax
+        platform = jax.default_backend()
+    if tune is None:
+        tune = os.environ.get(_TUNE_ENV, "") not in ("", "0")
+    bucket = (next_pow2(b), next_pow2(k), next_pow2(d))
+    return _resolve_cached(kernel_backend, bucket, str(platform), bool(tune))

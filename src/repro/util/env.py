@@ -89,19 +89,43 @@ def require_devices(n: int, *, local: bool = False) -> None:
             f"accelerators)")
 
 
-def set_platform(platform: str = "cpu") -> None:
-    """Pick the jax platform; on gpu also set the XLA perf flags.
+#: per-platform XLA flag shaping for the kernel launch path. The gpu
+#: set follows jax's published performance-tips list; cpu/tpu currently
+#: contribute nothing (Mosaic ignores XLA_FLAGS) but keep a slot so a
+#: future platform tweak lands in exactly one place.
+_KERNEL_FLAGS = {
+    "gpu": ("--xla_gpu_triton_gemm_any=True",
+            "--xla_gpu_enable_latency_hiding_scheduler=true"),
+}
 
-    The gpu flag set follows jax's published performance-tips list;
-    merged (not overwritten) into XLA_FLAGS so a forced host device
-    count set earlier survives.
+
+def apply_kernel_flags(platform: str, *, env: dict | None = None) -> str:
+    """Shape XLA_FLAGS for kernel launches on ``platform``.
+
+    Called from BOTH ends of the dispatch plane — `set_platform` (the
+    launcher side, before jax initialises) and `kernels.plan
+    .resolve_plan` (the engine side, when a fit resolves its
+    `KernelPlan`) — so the flag set cannot drift between a launcher
+    that configured the platform and a bare fit that did not. Merging
+    replaces same-name flags in place, so repeated application is
+    idempotent and a user's own XLA_FLAGS survive.
+    """
+    flags = _KERNEL_FLAGS.get(platform, ())
+    if flags:
+        return merge_xla_flags(*flags, env=env)
+    e = os.environ if env is None else env
+    return e.get("XLA_FLAGS", "")
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pick the jax platform; also apply its kernel-launch XLA flags.
+
+    Flags are merged (not overwritten) into XLA_FLAGS so a forced host
+    device count set earlier survives.
     """
     import jax
     jax.config.update("jax_platform_name", platform)
-    if platform == "gpu":
-        merge_xla_flags(
-            "--xla_gpu_triton_gemm_any=True",
-            "--xla_gpu_enable_latency_hiding_scheduler=true")
+    apply_kernel_flags(platform)
 
 
 def jax_enable_x64(use_x64: bool) -> None:
