@@ -64,10 +64,22 @@ def main() -> int:
         out = orig_fit(X, config, **kw)
         wall = time.perf_counter() - t0
         util = harvest_utilization(out.config.trace_dir)
+        cfg = out.config
+        # n_recomputed's unit depends on the bound family (kscan vs
+        # pair) — record the family, the unit, and the unit-converted
+        # pair-distance total so manifests compare across families.
+        from repro.api.config import bound_state_bytes
+        from repro.obs.efficiency import WorkModel
+        wm = WorkModel.for_bounds(cfg.k, X.shape[-1], cfg.bounds)
+        n_rec_total = int(sum(r.n_recomputed for r in out.telemetry))
         obs = {
             "rounds": len(out.telemetry),
-            "kscans_total": int(sum(r.n_recomputed
-                                    for r in out.telemetry)),
+            "kscans_total": n_rec_total,
+            "bounds_family": cfg.bounds,
+            "work_unit": wm.unit,
+            "pair_dist_evals": wm.pair_evals(n_rec_total),
+            "bound_state_bytes": bound_state_bytes(
+                cfg.bounds, len(X), cfg.k),
             "retrace_count": int(sum(tracecount.diff(tc0).values())),
             "peak_queue_depth": None,
             "fit_roofline_utilization": util,

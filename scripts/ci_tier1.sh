@@ -65,6 +65,12 @@ if [ "$#" -eq 0 ]; then
     # parity, pallas-vs-ref fit bit-parity on local tb/gb and XL
     # m=2/m=1, and retrace + hostsync green with the plan active).
     timeout 700 python -m pytest -x -q tests/test_kernels.py
+    # the bound families (fast parity/boundary-tie/resume tests ran
+    # above; this adds the slow-marked subprocess smoke: exponion ==
+    # none on local/mesh/xl/multihost incl. degenerate rings,
+    # cross-backend bit-parity with exact-annulus pair counts, mesh
+    # kill-and-resume, and the auditors green with exponion).
+    timeout 1000 python -m pytest -x -q tests/test_bounds_smoke.py
     # full static + invariant gate: ruff (if installed), the runtime
     # auditors (hostsync / retrace / donation) across backends, and the
     # planted-bug selftests proving every checker still has teeth.

@@ -1,0 +1,171 @@
+"""Bound-family end-to-end check (run via tests/test_bounds_smoke.py).
+
+Gates the bounds="exponion" PR with 8 forced host devices:
+
+  1. family parity per backend — exponion labels AND centroids are
+     bit-equal to bounds="none" on local, mesh(4 data shards),
+     xl(4 data x 2 model) and multihost, with N % n_shards != 0, plus
+     the degenerate-ring fallback (k_local < 4 on a (1,8) XL mesh);
+  2. cross-backend parity — the SAME exponion fit is bit-identical
+     (labels, centroids, per-point bounds, telemetry minus wall-clock)
+     across XL(1,1) vs local, XL(2,1) vs mesh(2,1) and mesh vs
+     multihost: the annulus schedule lives only in core/rounds.py and
+     the sharded variants test the exact same candidate set;
+  3. kill-and-resume — an exponion mesh fit interrupted at round 9
+     resumes bit-identically (the geometry table is rebuilt per round,
+     never checkpointed), and the checkpoint restores elastically onto
+     the LocalEngine;
+  4. auditors stay green with exponion — retrace (local + xl: the
+     per-round geometry rebuild mints no extra traces), hostsync
+     (zero unsanctioned device->host syncs) and the replicated-control-
+     flow lint.
+"""
+from repro.util.env import force_host_device_count
+force_host_device_count(8)
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.analysis import hostsync, replicated_lint, retrace
+from repro.core.state import full_mse
+
+rng = np.random.default_rng(0)
+k, d, n = 64, 16, 4001                  # 4001 % 2/4/8 != 0: tail rows
+centers = rng.normal(size=(k, d)) * 5
+X = (centers[rng.integers(0, k, n)]
+     + rng.normal(size=(n, d))).astype(np.float32)
+
+cfg = api.FitConfig(k=k, algorithm="tb", b0=512, max_rounds=80, seed=1,
+                    bounds="exponion", capacity_floor=256)
+
+
+def family_parity(tag, cfg_e, mesh=None, X_=None):
+    """exponion == none, bit-equal labels + centroids, same backend."""
+    X_ = X if X_ is None else X_
+    out_e = api.fit(X_, cfg_e, mesh=mesh)
+    out_n = api.fit(X_, dataclasses.replace(cfg_e, bounds="none"),
+                    mesh=mesh)
+    assert out_e.converged and out_n.converged
+    np.testing.assert_array_equal(out_e.labels, out_n.labels)
+    np.testing.assert_array_equal(out_e.C, out_n.C)
+    assert int((out_e.labels < 0).sum()) == 0
+    print(f"family parity[{tag}]: exponion == none bit-equal over "
+          f"{len(out_e.telemetry)} rounds")
+    return out_e
+
+
+def cross_parity(tag, out_a, out_b, exact_tel=False):
+    """Two exponion fits on different backends: labels, centroids and
+    per-point bounds bit-identical; telemetry exact for integer fields
+    — including the exact-annulus ``n_recomputed`` pair count, which
+    the local and sharded paths must agree on — and, across different
+    topologies, float scalars only to reduction-order tolerance
+    (``exact_tel=True`` for same-topology pairs)."""
+    np.testing.assert_array_equal(out_a.labels, out_b.labels)
+    np.testing.assert_array_equal(out_a.C, out_b.C)
+    np.testing.assert_array_equal(np.asarray(out_a.state.points.d),
+                                  np.asarray(out_b.state.points.d))
+    np.testing.assert_array_equal(np.asarray(out_a.state.points.lb),
+                                  np.asarray(out_b.state.points.lb))
+    assert len(out_a.telemetry) == len(out_b.telemetry)
+    for ra, rb in zip(out_a.telemetry, out_b.telemetry):
+        da, db = ra.to_dict(), rb.to_dict()
+        da.pop("t"), db.pop("t")
+        if exact_tel:
+            assert da == db, (tag, da, db)
+            continue
+        for key in set(da) | set(db):
+            va, vb = da.get(key), db.get(key)
+            if isinstance(va, float) and isinstance(vb, float):
+                np.testing.assert_allclose(va, vb, rtol=1e-5,
+                                           err_msg=f"{tag}:{key}")
+            else:
+                assert va == vb, (tag, key, da, db)
+    print(f"cross-backend[{tag}]: bit-identical"
+          f"{' incl. telemetry' if exact_tel else ' (+ pair counts)'}")
+
+
+# -- 1. family parity on every backend --------------------------------------
+out_local = family_parity("local", cfg)
+
+mesh41 = jax.make_mesh((4, 1), ("data", "model"))
+cfg_mesh = dataclasses.replace(cfg, backend="mesh", data_axes=("data",))
+family_parity("mesh(4)", cfg_mesh, mesh=mesh41)
+
+mesh42 = jax.make_mesh((4, 2), ("data", "model"))
+cfg_xl = dataclasses.replace(cfg, backend="xl", data_axes=("data",),
+                             model_axis="model")
+family_parity("xl(4,2)", cfg_xl, mesh=mesh42)
+
+from repro.launch.mesh import make_multihost_mesh
+mesh1d = make_multihost_mesh()
+cfg_mh = dataclasses.replace(cfg, backend="multihost")
+out_mh = family_parity("multihost", cfg_mh, mesh=mesh1d)
+
+# degenerate rings: k_local = 16/8 = 2 < 4 -> elkan-style full local scan
+mesh18 = jax.make_mesh((1, 8), ("data", "model"))
+cfg_deg = dataclasses.replace(cfg_xl, k=16, b0=256, capacity_floor=64)
+family_parity("xl(1,8) degenerate rings", cfg_deg, mesh=mesh18)
+
+# -- 2. cross-backend parity of the exponion fit itself ----------------------
+mesh11 = jax.make_mesh((1, 1), ("data", "model"))
+out_xl11 = api.fit(X, cfg_xl, mesh=mesh11)
+cross_parity("xl(1,1) == local", out_xl11, out_local)
+
+mesh21 = jax.make_mesh((2, 1), ("data", "model"))
+out_xl21 = api.fit(X, cfg_xl, mesh=mesh21)
+out_mesh21 = api.fit(X, cfg_mesh, mesh=mesh21)
+cross_parity("xl(2,1) == mesh(2)", out_xl21, out_mesh21)
+
+out_mesh1d = api.fit(X, dataclasses.replace(cfg, backend="mesh"),
+                     mesh=mesh1d)
+cross_parity("mesh == multihost", out_mesh1d, out_mh, exact_tel=True)
+
+# -- 3. kill-and-resume + elastic restore ------------------------------------
+mesh22 = jax.make_mesh((2, 2), ("data", "model"))
+out_full = api.fit(X, cfg_mesh, mesh=mesh22)
+with tempfile.TemporaryDirectory() as ckdir:
+    ck = api.CheckpointConfig(checkpoint_dir=ckdir, save_every=4)
+    api.fit(X, dataclasses.replace(cfg_mesh, max_rounds=9,
+                                   checkpoint=ck), mesh=mesh22)
+    km = api.NestedKMeans(dataclasses.replace(cfg_mesh, checkpoint=ck),
+                          mesh=mesh22)
+    km.fit(X, resume=True)
+    np.testing.assert_array_equal(out_full.C, km.cluster_centers_)
+    assert len(out_full.telemetry) == len(km.telemetry_)
+    for ra, rb in zip(out_full.telemetry, km.telemetry_):
+        da, db = ra.to_dict(), rb.to_dict()
+        da.pop("t"), db.pop("t")
+        assert da == db, (da, db)
+    print("exponion mesh kill-and-resume: bit-identical")
+
+    # elastic: the 2-shard exponion checkpoint restores onto local
+    kml = api.NestedKMeans(dataclasses.replace(
+        cfg, checkpoint=ck))
+    kml.fit(X, resume=True)
+    assert kml.converged_
+    mse_a = float(full_mse(jnp.asarray(X), jnp.asarray(out_full.C)))
+    msel = float(full_mse(jnp.asarray(X),
+                          jnp.asarray(kml.cluster_centers_)))
+    assert abs(mse_a - msel) / mse_a < 0.05, (mse_a, msel)
+    print(f"elastic mesh->local exponion resume: converged, "
+          f"mse {msel:.5f} (uninterrupted {mse_a:.5f})")
+
+# -- 4. auditors with exponion ------------------------------------------------
+for backend in ("local", "xl"):
+    v = retrace.audit_backend(backend, bounds="exponion")
+    assert not v, [str(x) for x in v]
+    print(f"retrace[{backend}] with exponion: one trace per bucket")
+v = hostsync.audit_backend("local", bounds="exponion")
+assert not v, [str(x) for x in v]
+print("hostsync[local] with exponion: zero unsanctioned syncs")
+v = replicated_lint.run()
+assert not v, [str(x) for x in v]
+print("replicated-control-flow lint: clean")
+
+print("bounds smoke OK")

@@ -182,7 +182,8 @@ def _unpatch() -> None:
 def audit_backend(backend: str = "local", *, n: int = 2048, d: int = 8,
                   k: int = 8, seed: int = 0, engine_factory=None,
                   trace_dir: Optional[str] = None,
-                  kernel_backend: Optional[str] = None) -> List[Violation]:
+                  kernel_backend: Optional[str] = None,
+                  bounds: str = "hamerly2") -> List[Violation]:
     """Warm up, then run one audited fit on ``backend``; returns the
     unsanctioned-sync violations. ``engine_factory`` overrides engine
     construction (the selftest injects a leaky engine). ``trace_dir``
@@ -190,7 +191,9 @@ def audit_backend(backend: str = "local", *, n: int = 2048, d: int = 8,
     observability plane adds no device->host syncs of its own (the
     PR 8 acceptance gate: hostsync stays green with tracing on).
     ``kernel_backend`` forces the kernel plan ("pallas" proves the fused
-    dispatch adds no syncs — `scripts/smoke_kernels.py`)."""
+    dispatch adds no syncs — `scripts/smoke_kernels.py`); ``bounds``
+    selects the bound family (`scripts/smoke_bounds.py` proves the
+    exponion geometry rebuild syncs nothing)."""
     import numpy as np
 
     from repro.api.config import FitConfig
@@ -203,7 +206,7 @@ def audit_backend(backend: str = "local", *, n: int = 2048, d: int = 8,
     X_val = rng.normal(size=(256, d)).astype(np.float32)
     config = FitConfig(k=k, b0=max(2 * k, n // 32), seed=seed,
                        backend=backend, max_rounds=24, eval_every=4,
-                       capacity_floor=32,
+                       capacity_floor=32, bounds=bounds,
                        kernel_backend=kernel_backend).resolve(n)
 
     def fit(audit: Optional[HostSyncAudit], obs=None):

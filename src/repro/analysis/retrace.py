@@ -130,12 +130,15 @@ def _round_site(backend: str):
 
 def audit_backend(backend: str = "local", *, n: int = 4096, d: int = 8,
                   k: int = 8, seed: int = 0,
-                  kernel_backend: str = None) -> List[Violation]:
+                  kernel_backend: str = None,
+                  bounds: str = "hamerly2") -> List[Violation]:
     """Run one full growth schedule on ``backend`` and check the trace
     contract. Multi-device backends need the CLI's forced host device
     count (see `repro.analysis.__main__`). ``kernel_backend`` forces a
     kernel plan ("pallas" proves the fused dispatch keeps one trace per
-    bucket — `scripts/smoke_kernels.py` runs exactly that)."""
+    bucket — `scripts/smoke_kernels.py` runs exactly that); ``bounds``
+    selects the bound family (exponion's per-round geometry rebuild
+    must not mint extra traces — `scripts/smoke_bounds.py`)."""
     import numpy as np
 
     from repro.api.config import FitConfig
@@ -147,7 +150,7 @@ def audit_backend(backend: str = "local", *, n: int = 4096, d: int = 8,
     X = rng.normal(size=(n, d)).astype(np.float32)
     config = FitConfig(k=k, b0=max(2 * k, n // 64), seed=seed,
                        backend=backend, max_rounds=40,
-                       capacity_floor=32,
+                       capacity_floor=32, bounds=bounds,
                        kernel_backend=kernel_backend).resolve(n)
     engine = make_engine(config, mesh=_mesh_for(backend, config))
     run = engine.begin(X, config)

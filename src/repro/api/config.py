@@ -13,10 +13,32 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 ALGORITHMS = ("lloyd", "lloyd-elkan", "mb", "sgd", "mbf", "gb", "tb")
-BOUNDS = ("none", "hamerly2", "elkan")
+BOUNDS = ("none", "hamerly2", "elkan", "exponion")
+
+# elkan's per-(point, centroid) lower-bound matrix is O(n*k) f32 — fine
+# for the paper-scale reference path, a silent OOM at serving-scale k.
+# Warn once the matrix would cross this many bytes (64 MB per shard).
+ELKAN_STATE_WARN_BYTES = 64 * 1024 * 1024
+
+
+def bound_state_bytes(bounds: str, n: int, k: int) -> int:
+    """Per-shard bytes of per-point bound state for ``n`` local rows.
+
+    hamerly2/exponion keep two f32 scalars per point (`PointState.d` /
+    `.lb`); elkan adds the (n, k) f32 lower-bound matrix. Recorded in
+    benchmark manifests so memory-vs-work tradeoffs are auditable.
+    """
+    if bounds == "elkan":
+        return 4 * n * (k + 2)
+    if bounds in ("hamerly2", "exponion"):
+        return 4 * n * 2
+    return 0
+
+
 BACKENDS = ("local", "mesh", "xl", "multihost")
 
 # algorithms driven by the nested grow-batch loop (the tb/gb family)
@@ -85,7 +107,23 @@ class FitConfig:
       rho         batch-growth threshold (Alg. 6); inf = gb-inf/tb-inf.
       b0          initial (global) batch size for the nested family /
                   fixed batch size for mb / mbf.
-      bounds      none | hamerly2 | elkan (nested family only).
+      bounds      none | hamerly2 | elkan | exponion (nested family
+                  only). All bound families are EXACT — labels are
+                  bit-equal to bounds="none" on every backend; they
+                  differ only in how much provably-unnecessary work
+                  they skip and how much state they carry:
+                    none      no state, every point scans all k.
+                    hamerly2  2 f32/point; failing points scan all k
+                              (capacity-compacted). The default.
+                    elkan     (n, k) f32 lower-bound matrix — tightest
+                              per-pair pruning, but O(n*k) memory: at
+                              k=1024, b=64k that is 256 MB f32 PER
+                              SHARD (construction warns at k >= 512;
+                              prefer exponion at large k).
+                    exponion  2 f32/point (hamerly2's layout); failing
+                              points scan only an annular candidate
+                              set from the sorted inter-centroid
+                              table — the large-k family.
       capacity_floor  smallest power-of-two recompute bucket the
                   capacity policy will compile (see driver docstring).
       max_rounds / time_budget_s   work budgets.
@@ -167,6 +205,16 @@ class FitConfig:
         if self.bounds not in BOUNDS:
             raise ValueError(f"unknown bounds {self.bounds!r}; "
                              f"expected one of {BOUNDS}")
+        if self.bounds == "elkan" and self.k >= 512:
+            # n is unknown until fit time, so gate on k alone: at this k
+            # any batch >= 32k rows crosses ELKAN_STATE_WARN_BYTES.
+            warnings.warn(
+                f"bounds='elkan' allocates an O(n*k) f32 lower-bound "
+                f"matrix — at k={self.k} that is "
+                f"{4 * self.k / 1024:.0f} KB per point per shard "
+                f"(k=1024, b=64k: 256 MB). For large k prefer "
+                f"bounds='exponion': hamerly2-sized state with annular "
+                f"candidate pruning.", ResourceWarning, stacklevel=2)
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"expected one of {BACKENDS}")

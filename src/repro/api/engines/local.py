@@ -84,7 +84,8 @@ class _LocalRun(EngineRun):
         # kernel dispatch: resolved ONCE for the fit at its maximum
         # batch bucket; every round below threads this plan
         self.kernel_plan = resolve_plan(config.kernel_backend, b=N,
-                                        k=config.k, d=self._Xd.shape[1])
+                                        k=config.k, d=self._Xd.shape[1],
+                                        bounds=config.bounds)
         # mb/mbf resampling stream (paper footnote 1: cycle a reshuffle)
         self._mb_pos = 0
         self._mb_perm = rng.permutation(N)

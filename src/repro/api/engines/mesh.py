@@ -113,7 +113,7 @@ class _MeshRun(EngineRun):
         from repro.kernels.plan import resolve_plan
         self.kernel_plan = resolve_plan(config.kernel_backend,
                                         b=self.b_max, k=config.k,
-                                        d=self._dim)
+                                        d=self._dim, bounds=config.bounds)
         self.state = self._place_state(self._host_init_state(C0))
 
     # -- layout hooks (overridden by _XLRun / _MultiHostRun) ----------------

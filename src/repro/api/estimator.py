@@ -132,8 +132,10 @@ class NestedKMeans:
                 obs = FitObserver(
                     cfg.trace_dir, process_id=jax.process_index(),
                     k=cfg.k, d=int(run.state.stats.C.shape[-1]),
+                    bounds=cfg.bounds,
                     meta={"backend": cfg.backend,
                           "algorithm": cfg.algorithm,
+                          "bounds": cfg.bounds,
                           "n_points": run.n_points,
                           "n_shards": run.n_shards, "seed": cfg.seed})
             resume_from = None
@@ -218,7 +220,7 @@ class NestedKMeans:
                 from repro.kernels.plan import resolve_plan
                 plan = resolve_plan(cfg.kernel_backend,
                                     b=int(X.shape[0]), k=cfg.k,
-                                    d=int(X.shape[1]))
+                                    d=int(X.shape[1]), bounds=cfg.bounds)
                 new_state, info = nested_jit(
                     Xd, state, b=int(X.shape[0]), rho=cfg.rho,
                     bounds=cfg.bounds, capacity=None,

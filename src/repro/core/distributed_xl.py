@@ -48,8 +48,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import controller, rounds
-from repro.core.distributed import (assign_top2_sharded, per_shard_n_valid,
-                                    shard_map_compat)
+from repro.core.distributed import (_fold_top2, assign_top2_sharded,
+                                    per_shard_n_valid, shard_map_compat)
 from repro.core.rounds import _euclid
 from repro.core.state import (ClusterStats, ElkanBounds, KMeansState,
                               PointState, RoundInfo, centroid_update)
@@ -167,6 +167,139 @@ def _assign_elkan_xl(x, state, a_prev, valid, *, k_local: int,
     return a_new, d_new, None, n_comp, jnp.asarray(False), l_new
 
 
+def _exponion_geom_xl(C_local: jax.Array, model_axis: str, m: int,
+                      k_offset: jax.Array):
+    """Exponion geometry from per-shard k-slices: (B, s).
+
+    ``B`` is this shard's (k, k_local) block of the inter-centroid
+    distance matrix — rows are GLOBAL anchors, columns are the LOCAL
+    centroids — assembled with the same ring ppermute as
+    `_half_intercentroid_sharded`, so peak memory stays O(k^2 / m) per
+    shard (never the full k x k table). ``s`` is the full (k,) nearest-
+    other-centroid table (min over local columns, pmin over the model
+    axis) — one structure feeds both the Hamerly threshold (s/2) and the
+    annulus radius (2*d_a + s), exactly like the local `ExponionGeom`.
+
+    The own diagonal of B is set to an EXACT zero: the anchor must
+    always pass its own ``<= R`` test (the matmul distance form can
+    leave rounding dust there), which is what makes the union of
+    per-shard candidate sets a superset of the exact global annulus.
+    """
+    k_local = C_local.shape[0]
+    k = k_local * m
+    ax = jax.lax.axis_index(model_axis)
+    cols = jnp.arange(k_local)
+    own_rows = k_offset + cols
+
+    B = jnp.zeros((k, k_local), jnp.float32)
+    block = C_local
+    perm = [(i, (i + 1) % m) for i in range(m)]
+    for step in range(m):
+        # after `step` rotations this shard holds the block that
+        # originated on shard (ax - step) % m — its rows of B
+        d_blk = _euclid(ref.pairwise_dist2(block, C_local))
+        src = jax.lax.rem(ax - step + m, m)
+        B = jax.lax.dynamic_update_slice(
+            B, d_blk, (src * k_local, jnp.int32(0)))
+        if step < m - 1:
+            block = jax.lax.ppermute(block, model_axis, perm)
+
+    B = B.at[own_rows, cols].set(0.0)
+    masked = B.at[own_rows, cols].set(jnp.inf)
+    s = jax.lax.pmin(jnp.min(masked, axis=1), model_axis)      # (k,)
+    return B, s
+
+
+def _assign_exponion_xl(x, state, a_prev, valid, *, k_local: int,
+                        k_offset, model_axis: str, m: int,
+                        use_shalf: bool):
+    """`rounds._assign_exponion` with the centroids model-sharded.
+
+    Each shard tests its local centroid columns against the EXACT
+    annulus (``B[anchor] <= R``) — there is no global sorted neighbour
+    table across shards, so each shard counts its block's members
+    directly; the union of per-shard candidate sets is the exact
+    annulus plus full rows for unseen points, the same set the local
+    path's ``rank < m_exact`` mask selects, so labels, centroids, the
+    stored lb AND the ``n_recomputed`` pair count are all bit-equal to
+    the local/mesh exponion (and labels/centroids to ``bounds="none"``).
+
+    Degenerate rings: when k/m leaves fewer than 4 local centroid
+    columns, an annulus test cannot beat scanning the row it would need
+    to test — fall back to the elkan-style full local scan for failing
+    points and skip building B entirely (the s table still comes from
+    the ring reduction for the Hamerly threshold).
+
+    Per-shard (min, 2nd-min, global argmin) triples are tree-folded
+    with `distributed._fold_top2` (lowest-global-index tie-break), so
+    the fold matches `jnp.argmin` on the unsharded row.
+    """
+    C_local = state.stats.C
+    k = k_local * m
+    b = x.shape[0]
+    seen = a_prev >= 0
+    degenerate = k_local < 4
+
+    p_max = jax.lax.pmax(jnp.max(state.stats.p), model_axis)
+    d_a = _dist_to_assigned_sharded(x, C_local, a_prev, k_offset,
+                                    model_axis)
+    if degenerate:
+        B = None
+        s_half = _half_intercentroid_sharded(C_local, model_axis, m)
+    else:
+        B, s = _exponion_geom_xl(C_local, model_axis, m, k_offset)
+        s_half = 0.5 * s
+    settled, lb_dec, d_a, _n_need = rounds._hamerly_settled(
+        x, state, a_prev, valid, use_shalf=use_shalf, p_max=p_max,
+        d_assigned=d_a, s_half=s_half)
+    needs = ~settled
+
+    if degenerate:
+        scan = jnp.broadcast_to(needs[:, None], (b, k_local))
+    else:
+        anchor = jnp.clip(a_prev, 0, k - 1)
+        R = 2.0 * d_a + s[anchor]
+        scan = needs[:, None] & ((B[anchor] <= R[:, None])
+                                 | ~seen[:, None])
+    if valid is not None:
+        scan = scan & valid[:, None]
+
+    # candidate top-2 in SQUARED space (the units `assign_top2_sharded`
+    # folds in — identical values and tie-breaks), sqrt after the fold
+    cand = jnp.where(scan, ref.pairwise_dist2(x, C_local), jnp.inf)
+    a_col = jnp.argmin(cand, axis=1).astype(jnp.int32)
+    a_loc = a_col + k_offset                         # GLOBAL index
+    d1_loc = jnp.min(cand, axis=1)
+    rest = jnp.where(jnp.arange(k_local)[None, :] == a_col[:, None],
+                     jnp.inf, cand)
+    d2_loc = jnp.min(rest, axis=1)
+
+    d1s = jax.lax.all_gather(d1_loc, model_axis)     # (m, b)
+    d2s = jax.lax.all_gather(d2_loc, model_axis)
+    ias = jax.lax.all_gather(a_loc, model_axis)
+    while d1s.shape[0] > 1:
+        half = d1s.shape[0] // 2
+        d1, d2, ia = _fold_top2(
+            d1s[:half], d2s[:half], ias[:half],
+            d1s[half:2 * half], d2s[half:2 * half], ias[half:2 * half])
+        if d1s.shape[0] % 2:           # odd: carry the tail row over
+            d1 = jnp.concatenate([d1, d1s[2 * half:]])
+            d2 = jnp.concatenate([d2, d2s[2 * half:]])
+            ia = jnp.concatenate([ia, ias[2 * half:]])
+        d1s, d2s, ias = d1, d2, ia
+    a_f, d1, d2 = (ias[0].astype(jnp.int32), _euclid(d1s[0]),
+                   _euclid(d2s[0]))
+
+    a_new = jnp.where(settled, a_prev, a_f)
+    d_new = jnp.where(settled, d_a, d1)
+    lb_new = jnp.where(settled, lb_dec, d2)
+    # pair accounting (elkan convention): scanned pairs + the per-seen-
+    # point d_a refresh (pads are never seen, so they add nothing)
+    n_comp = jax.lax.psum(jnp.sum(scan.astype(jnp.int32)), model_axis) \
+        + jnp.sum(seen.astype(jnp.int32))
+    return a_new, d_new, lb_new, n_comp, jnp.asarray(False), None
+
+
 def _chunk_rows(arrs, *, m: int, model_axis: str):
     """Deal the batch rows into ``m`` chunks, one per model shard.
 
@@ -256,10 +389,12 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
     refresh upper bound + decayed second-nearest lower bound, with the
     threshold's s(j)/2 table built from all-gathered per-shard slices,
     and the same capacity compaction / overflow-retry contract as the
-    local round) and "elkan" (paper-faithful per-(i, j) bounds with
+    local round), "elkan" (paper-faithful per-(i, j) bounds with
     the l matrix's k column sharded over the model axis —
-    `_assign_elkan_xl`). RoundInfo is replica-consistent on every
-    device.
+    `_assign_elkan_xl`) and "exponion" (annular candidate pruning with
+    the inter-centroid geometry built from ring-rotated centroid
+    slices — `_assign_exponion_xl`). RoundInfo is replica-consistent on
+    every device.
     """
     # trace accounting (see repro.util.tracecount): one count per jit
     # trace, keyed on the intended executable-cache statics (the plan is
@@ -322,10 +457,14 @@ def xl_nested_round(X: jax.Array, state: KMeansState, *, b: int,
         a_new, d_new, lb2, n_rec, overflow, l_new = _assign_elkan_xl(
             x, state, a_prev, valid, k_local=k_local, k_offset=k_offset,
             model_axis=model_axis)
+    elif bounds == "exponion":
+        a_new, d_new, lb2, n_rec, overflow, l_new = _assign_exponion_xl(
+            x, state, a_prev, valid, k_local=k_local, k_offset=k_offset,
+            model_axis=model_axis, m=m, use_shalf=use_shalf)
     else:
         raise ValueError(f"unsupported bounds for the XL engine: "
-                         f"{bounds!r} (use 'none', 'hamerly2' or "
-                         f"'elkan')")
+                         f"{bounds!r} (use 'none', 'hamerly2', 'elkan' "
+                         f"or 'exponion')")
 
     if valid is not None:
         a_new = jnp.where(valid, a_new, jnp.int32(-1))

@@ -14,6 +14,8 @@ Algorithms (paper naming):
       bounds="none"       -> gb (exhaustive assignment each round)
       bounds="hamerly2"   -> tb, TPU-native two-bound + capacity compaction
       bounds="elkan"      -> tb, paper-faithful per-(i,j) lower bounds
+      bounds="exponion"   -> tb, Hamerly test + annular candidate pruning
+                             (Newling & Fleuret) for large k
 """
 from __future__ import annotations
 
@@ -24,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import controller
-from repro.core.state import (ElkanBounds, KMeansState, RoundInfo,
+from repro.core.state import (ElkanBounds, ExponionGeom, KMeansState,
+                              RoundInfo, build_exponion_geom,
                               centroid_update)
 from repro.kernels import ops, ref
 from repro.kernels.plan import KernelPlan
@@ -352,6 +355,86 @@ def _assign_elkan(x, state, a_prev, valid, *, b: int):
     return a_new, d_new, None, n_comp, jnp.asarray(False), l_new
 
 
+def _assign_exponion(x, state, a_prev, valid, *, use_shalf: bool,
+                     geom: Optional[ExponionGeom] = None,
+                     p_max=None, d_assigned=None):
+    """Annular candidate pruning (Newling & Fleuret's exponion).
+
+    Reuses the Hamerly settled test verbatim (`_hamerly_settled`, with
+    ``s/2`` read off the geometry table instead of recomputed); a point
+    that FAILS the test scans only the centroids inside the ball of
+    radius R = 2*d(x, c_a) + s(a) around its anchor — never the full k.
+
+    Exactness: any centroid c_j outside the ball has
+    d(x, c_j) >= d(c_a, c_j) - d(x, c_a) > R - u = u + s(a), while the
+    anchor (distance u) and the anchor's nearest neighbour (distance
+    <= u + s(a) by the triangle inequality) are ALWAYS candidates — so
+    the candidate argmin is the true argmin (every centroid tied at the
+    minimum satisfies d(c_a, c_j) <= 2u <= R, preserving the
+    lowest-index tie-break of ``bounds="none"``) and the candidate
+    second-minimum is the exact second-nearest distance, making the
+    stored ``lb`` as tight as an exhaustive scan's. Boundary ties
+    (d(c_a, c_j) == R exactly) are INCLUDED via a ``<=`` ring count.
+
+    The candidate mask is the EXACT annulus (``rank < m_exact``) — the
+    same set the centroid-sharded variant tests per slice, so the
+    ``n_recomputed`` accounting is identical across backends. All
+    shapes depend only on (b, k) — the ring count is a traced VALUE —
+    so the retrace auditor's one-trace-per-(b, capacity) bucket
+    contract is untouched. (The paper's log2-bucketed ring layout is a
+    cache-locality play for scalar CPUs; on a vectorised backend the
+    mask is free and padding the ring only inflates the honest count.)
+
+    ``n_recomputed`` counts actual pair-distance evaluations (annulus
+    scans + the per-seen-point d_a refresh), the elkan convention — NOT
+    hamerly2's k-scan unit. `repro.obs.efficiency.WorkModel` prices the
+    two units accordingly.
+
+    The optional ``geom`` / ``p_max`` / ``d_assigned`` overrides exist
+    for the centroid-sharded engine (`core.distributed_xl`), which
+    builds the geometry from all-gathered centroid slices; the annulus
+    schedule itself lives ONLY here.
+    """
+    C = state.stats.C
+    k = C.shape[0]
+    b = x.shape[0]
+    if geom is None:
+        geom = build_exponion_geom(C)
+    seen = a_prev >= 0
+    settled, lb_dec, d_a, _n_need = _hamerly_settled(
+        x, state, a_prev, valid, use_shalf=use_shalf, p_max=p_max,
+        d_assigned=d_assigned, s_half=0.5 * geom.s)
+    needs = ~settled
+
+    anchor = jnp.clip(a_prev, 0, k - 1)
+    R = 2.0 * d_a + geom.s[anchor]
+    rows = geom.dist[anchor]                                # (b, k) sorted
+    m_exact = jnp.sum((rows <= R[:, None]).astype(jnp.int32), axis=1)
+    ring = geom.rank[anchor] < m_exact[:, None]             # (b, k)
+    scan = needs[:, None] & (ring | ~seen[:, None])         # new pts: all k
+    if valid is not None:
+        scan = scan & valid[:, None]
+
+    # candidate top-2 in SQUARED space (the exact values and tie-break
+    # order of `ops.assign_top2` on the full row), sqrt at the boundary
+    d2_all = ref.pairwise_dist2(x, C)                       # (b, k)
+    cand = jnp.where(scan, d2_all, jnp.inf)
+    a_f = jnp.argmin(cand, axis=1).astype(jnp.int32)
+    d1sq = jnp.take_along_axis(cand, a_f[:, None], axis=1)[:, 0]
+    rest = jnp.where(jnp.arange(k)[None, :] == a_f[:, None], jnp.inf, cand)
+    d1, d2 = _euclid(d1sq), _euclid(jnp.min(rest, axis=1))
+
+    a_new = jnp.where(settled, a_prev, a_f)
+    d_new = jnp.where(settled, d_a, d1)
+    lb_new = jnp.where(settled, lb_dec, d2)
+    # pair-distance accounting (elkan convention): every scanned
+    # (point, centroid) pair + the d_a refresh of every seen point
+    # (pads are never seen, so they add nothing)
+    n_comp = jnp.sum(scan.astype(jnp.int32)) \
+        + jnp.sum(seen.astype(jnp.int32))
+    return a_new, d_new, lb_new, n_comp, jnp.asarray(False), None
+
+
 def nested_round(X: jax.Array, state: KMeansState, *, b: int,
                  rho: float, bounds: str = "hamerly2",
                  capacity: Optional[int] = None, use_shalf: bool = True,
@@ -414,6 +497,9 @@ def nested_round(X: jax.Array, state: KMeansState, *, b: int,
     elif bounds == "elkan":
         a_new, d_new, lb2, n_rec, overflow, l_new = \
             _assign_elkan(x, state, a_prev, valid, b=b)
+    elif bounds == "exponion":
+        a_new, d_new, lb2, n_rec, overflow, l_new = _assign_exponion(
+            x, state, a_prev, valid, use_shalf=use_shalf)
     else:
         raise ValueError(f"unknown bounds {bounds!r}")
 

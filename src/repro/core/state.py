@@ -46,13 +46,69 @@ class PointState:
     a: jax.Array          # (N,) int32 last assignment, -1 = never assigned
     d: jax.Array          # (N,) f32 distance at last (re)computation
     lb: jax.Array         # (N,) f32 lower bound on 2nd-nearest distance
-                          #      (hamerly2 path; ignored by others)
+                          #      (hamerly2 + exponion paths; ignored by
+                          #      others — exponion shares hamerly2's
+                          #      layout exactly, so sharding specs,
+                          #      checkpoints and elastic resume treat the
+                          #      two families identically)
 
 
 @_pytree_dataclass
 class ElkanBounds:
     """Paper-faithful per-(i, j) lower bounds (tb-rho reference path)."""
     l: jax.Array          # (N, k) f32
+
+
+@_pytree_dataclass
+class ExponionGeom:
+    """Per-round inter-centroid geometry for ``bounds="exponion"``.
+
+    Newling & Fleuret's annular pruning ("Fast K-Means with Accurate
+    Bounds"): a point that fails its Hamerly test only scans centroids
+    inside the ball of radius R = 2*d(x, c_a) + s(a) around its anchor
+    c_a, where s(a) is the distance from the anchor to its nearest other
+    centroid. This structure is rebuilt once per round from the current
+    centroids — amortised O(k^2) per ROUND instead of O(k) per failing
+    POINT — and is ephemeral (never checkpointed; every leaf shape
+    depends only on the static k, so it adds no jit trace keys).
+
+      order  (k, k) int32  per-anchor centroid indices sorted by
+                           distance; ``order[j, 0] == j`` (self first).
+      dist   (k, k) f32    the matching sorted euclidean distances
+                           (``dist[j, 0] == 0``).
+      rank   (k, k) int32  inverse permutation: ``rank[j, c]`` is the
+                           sorted position of centroid c around anchor
+                           j — the annulus test is ``rank < m`` for a
+                           per-point ring count m.
+      s      (k,)   f32    distance to the nearest OTHER centroid
+                           (``dist[:, 1]``); ``s/2`` doubles as
+                           Hamerly's s(j)/2 table, so one structure
+                           feeds both the settled test and the annulus.
+    """
+    order: jax.Array
+    dist: jax.Array
+    rank: jax.Array
+    s: jax.Array
+
+
+def build_exponion_geom(C: jax.Array) -> ExponionGeom:
+    """Sorted inter-centroid neighbour table for the exponion family."""
+    from repro.kernels import ref
+
+    k = C.shape[0]
+    d2 = ref.pairwise_dist2(C, C)
+    # the self-distance must sort first with an exact 0 (the matmul form
+    # can leave rounding dust on the diagonal)
+    d2 = d2.at[jnp.arange(k), jnp.arange(k)].set(0.0)
+    dist_full = jnp.sqrt(jnp.maximum(d2, 0.0))
+    order = jnp.argsort(dist_full, axis=1).astype(jnp.int32)
+    dist = jnp.take_along_axis(dist_full, order, axis=1)
+    rank = jnp.argsort(order, axis=1).astype(jnp.int32)
+    if k > 1:
+        s = dist[:, 1]
+    else:
+        s = jnp.zeros((k,), jnp.float32)
+    return ExponionGeom(order=order, dist=dist, rank=rank, s=s)
 
 
 @_pytree_dataclass

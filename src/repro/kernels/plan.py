@@ -62,12 +62,19 @@ class KernelPlan:
     bd: int                         # feature columns per cluster-sum tile
     bucket: Tuple[int, int, int]    # pow2 (b, k, d) lattice cell
     source: str                     # "table" | "tuned" | "cached"
+    family: str = "unset"           # bound family the plan serves — the
+                                    # fused pallas round only covers
+                                    # none/hamerly2; elkan/exponion route
+                                    # through the per-op kernels, and
+                                    # manifests need the plan itself to
+                                    # say which shape a fit actually ran
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON form for benchmark manifests / FitOutcome."""
         return {"backend": self.backend, "interpret": self.interpret,
                 "bn": self.bn, "bk": self.bk, "bd": self.bd,
-                "bucket": list(self.bucket), "source": self.source}
+                "bucket": list(self.bucket), "source": self.source,
+                "family": self.family}
 
 
 def _table_blocks(bucket: Tuple[int, int, int]) -> Tuple[int, int, int]:
@@ -141,7 +148,8 @@ def _tune_blocks(platform: str,
 @functools.lru_cache(maxsize=None)
 def _resolve_cached(kernel_backend: Optional[str],
                     bucket: Tuple[int, int, int],
-                    platform: str, tune: bool) -> KernelPlan:
+                    platform: str, tune: bool,
+                    family: str) -> KernelPlan:
     from repro.util.env import apply_kernel_flags
 
     # Satellite of the dispatch refactor: the env-module flag shaping is
@@ -172,21 +180,27 @@ def _resolve_cached(kernel_backend: Optional[str],
         except OSError:
             pass                    # read-only checkout: keep the result
     return KernelPlan(backend=backend, interpret=(platform != "tpu"),
-                      bn=bn, bk=bk, bd=bd, bucket=bucket, source=source)
+                      bn=bn, bk=bk, bd=bd, bucket=bucket, source=source,
+                      family=family)
 
 
 def resolve_plan(kernel_backend: Optional[str] = None, *, b: int, k: int,
                  d: int, platform: Optional[str] = None,
-                 tune: Optional[bool] = None) -> KernelPlan:
+                 tune: Optional[bool] = None,
+                 bounds: Optional[str] = None) -> KernelPlan:
     """Resolve ``config.kernel_backend`` into a per-fit `KernelPlan`.
 
     Call once per fit with the fit's maximum batch (b), k and d; the
-    result is cached per (backend, bucket, platform), so the legacy
-    per-call path through `ops` pays only a dict lookup.
+    result is cached per (backend, bucket, platform, family), so the
+    legacy per-call path through `ops` pays only a dict lookup.
 
       kernel_backend  None (auto: pallas iff TPU) | "ref" | "pallas"
       platform        defaults to ``jax.default_backend()``
       tune            defaults to the ``REPRO_TUNE_KERNELS`` env var
+      bounds          the fit's bound family, recorded on the plan for
+                      manifests (elkan/exponion never take the fused
+                      pallas round — the plan should say so). Purely
+                      informational: block sizes don't depend on it.
     """
     if kernel_backend not in (None, "ref", "pallas"):
         raise ValueError(f"unknown kernel_backend {kernel_backend!r}")
@@ -196,4 +210,5 @@ def resolve_plan(kernel_backend: Optional[str] = None, *, b: int, k: int,
     if tune is None:
         tune = os.environ.get(_TUNE_ENV, "") not in ("", "0")
     bucket = (next_pow2(b), next_pow2(k), next_pow2(d))
-    return _resolve_cached(kernel_backend, bucket, str(platform), bool(tune))
+    return _resolve_cached(kernel_backend, bucket, str(platform),
+                           bool(tune), bounds or "unset")

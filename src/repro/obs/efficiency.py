@@ -1,15 +1,28 @@
 """Roofline-aware efficiency: achieved work per round vs the bound.
 
-The unit of work is the **k-scan**: one point scanned against all ``k``
-centroids. A nested round's k-scan count is exactly
-``RoundInfo.n_recomputed`` — the points whose bounds failed and paid a
-full distance pass (the quantity Newling & Fleuret's bounds papers
-track as *the* scaling signal). From ``(k, d)`` a k-scan costs
+The natural unit of work depends on the bound family, and
+``RoundInfo.n_recomputed`` is counted in that family's unit:
 
-  * FLOPs:      ``3 * d * k``   (one fused mul-add + compare per dim
-                 per centroid, the standard distance-kernel count);
-  * HBM bytes:  ``4 * d``       (stream the f32 row once; the centroid
-                 block is k*d*4 ONCE per round, not per point).
+  * ``unit="kscan"`` (bounds none / hamerly2): one point scanned
+    against all ``k`` centroids — n_recomputed counts the points whose
+    bounds failed and paid a full distance pass (the quantity Newling &
+    Fleuret's bounds papers track as *the* scaling signal).
+  * ``unit="pair"`` (bounds elkan / exponion): one (point, centroid)
+    pair distance — these families prune WITHIN the row (elkan's
+    per-pair bound test, exponion's annular candidate set), so pricing
+    their counter as full k-scans would overstate the work by the very
+    factor the family exists to save.
+
+From ``(k, d)`` the costs are
+
+  * FLOPs:      ``3 * d`` per pair distance (one fused mul-add +
+                 compare per dim; a k-scan is ``k`` pairs);
+  * HBM bytes:  ``4 * d``  per scanning point (stream the f32 row
+                 once; the centroid block is k*d*4 ONCE per round, not
+                 per point). In pair units the row stream is estimated
+                 at one row per ``k`` pairs — exact when rows scan the
+                 full k, an overestimate (conservative bound) when the
+                 annulus is small.
 
 `WorkModel` prices a round with ``roofline/analysis.roofline_terms``
 (TPU v5e peak model) and turns the measured wall time into a
@@ -37,35 +50,69 @@ FLOPS_PER_DIST = 3.0
 F32_BYTES = 4
 
 
+#: bound family -> the unit its ``n_recomputed`` counter is measured in
+BOUNDS_WORK_UNIT = {
+    "none": "kscan",
+    "hamerly2": "kscan",
+    "elkan": "pair",
+    "exponion": "pair",
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class RoundWork:
     """Priced work of one round: counts, the bound, and utilization."""
-    kscans: int            # points that paid a full k-centroid scan
-    dist_evals: int        # kscans * k (point-centroid distance evals)
+    kscans: int            # full-k-scan equivalents (exact in kscan
+                           # units; ceil(pairs / k) in pair units)
+    dist_evals: int        # (point, centroid) pair distance evals
     flops: float
     hbm_bytes: float
     bound_s: float         # roofline lower bound for this much work
     bottleneck: str        # "compute" | "memory" | "collective"
     dt_s: Optional[float] = None
     utilization: Optional[float] = None   # bound_s / dt_s, in [0, ~1]
+    unit: str = "kscan"    # what n_recomputed counted ("kscan" | "pair")
 
 
 class WorkModel:
-    """Prices nested rounds for a fixed ``(k, d)`` problem shape."""
+    """Prices nested rounds for a fixed ``(k, d)`` problem shape.
 
-    def __init__(self, k: int, d: int):
+    ``unit`` declares what the rounds' ``n_recomputed`` counts:
+    "kscan" (none/hamerly2 — points times full k) or "pair"
+    (elkan/exponion — individual pair distances). Use `for_bounds` to
+    pick the unit from a fit's bound family.
+    """
+
+    def __init__(self, k: int, d: int, unit: str = "kscan"):
         if k < 1 or d < 1:
             raise ValueError(f"WorkModel needs k, d >= 1, got k={k} d={d}")
+        if unit not in ("kscan", "pair"):
+            raise ValueError(f"unknown work unit {unit!r}")
         self.k = int(k)
         self.d = int(d)
+        self.unit = unit
+
+    @classmethod
+    def for_bounds(cls, k: int, d: int, bounds: str) -> "WorkModel":
+        """The model whose unit matches a bound family's counter."""
+        return cls(k, d, unit=BOUNDS_WORK_UNIT.get(bounds, "kscan"))
+
+    def pair_evals(self, n_recomputed: int) -> int:
+        """``n_recomputed`` converted to pair-distance evaluations."""
+        n = max(0, int(n_recomputed))
+        return n * self.k if self.unit == "kscan" else n
 
     def flops(self, n_recomputed: int) -> float:
-        return FLOPS_PER_DIST * self.d * self.k * n_recomputed
+        return FLOPS_PER_DIST * self.d * self.pair_evals(n_recomputed)
 
     def hbm_bytes(self, n_recomputed: int) -> float:
-        # each recomputed row streams once; the centroid block streams
-        # once per round regardless of how many points scan it
-        return F32_BYTES * (n_recomputed * self.d + self.k * self.d)
+        # each scanning row streams once; the centroid block streams
+        # once per round regardless of how many points scan it. In pair
+        # units the row count is estimated at ceil(pairs / k) — exact
+        # for full-row scans, conservative for small annuli.
+        n = max(0, int(n_recomputed))
+        rows = n if self.unit == "kscan" else -(-n // self.k)
+        return F32_BYTES * (rows * self.d + self.k * self.d)
 
     def roofline(self, n_recomputed: int) -> Roofline:
         return roofline_terms(self.flops(n_recomputed),
@@ -80,7 +127,8 @@ class WorkModel:
         util = None
         if dt_s is not None and dt_s > 0.0:
             util = bound / dt_s
-        return RoundWork(kscans=n, dist_evals=n * self.k,
+        kscans = n if self.unit == "kscan" else -(-n // self.k)
+        return RoundWork(kscans=kscans, dist_evals=self.pair_evals(n),
                          flops=rl.flops, hbm_bytes=rl.hbm_bytes,
                          bound_s=bound, bottleneck=rl.bottleneck,
-                         dt_s=dt_s, utilization=util)
+                         dt_s=dt_s, utilization=util, unit=self.unit)

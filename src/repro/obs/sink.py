@@ -51,11 +51,15 @@ class FitObserver:
 
     ``k``/``d`` enable the roofline `WorkModel`; without them the
     observer still traces rounds, just without priced work or the
-    utilization gauge.
+    utilization gauge. ``bounds`` selects the model's work unit:
+    elkan/exponion rounds count individual pair distances in
+    ``n_recomputed`` (annulus scans, not full k rows), and pricing them
+    as k-scans would overstate the work by exactly the pruning factor.
     """
 
     def __init__(self, trace_dir: Union[str, Path], *, process_id: int = 0,
                  k: Optional[int] = None, d: Optional[int] = None,
+                 bounds: Optional[str] = None,
                  meta: Optional[Dict[str, Any]] = None,
                  registry: Optional[MetricsRegistry] = None,
                  rotate_bytes: int = 8 << 20):
@@ -63,7 +67,8 @@ class FitObserver:
                                  rotate_bytes=rotate_bytes)
         self.registry = registry if registry is not None else \
             MetricsRegistry()
-        self.work = WorkModel(k, d) if k and d else None
+        self.work = (WorkModel.for_bounds(k, d, bounds or "hamerly2")
+                     if k and d else None)
         self._closed = False
         self._tc_before = tracecount.snapshot()
         self._store_before: Dict[str, Any] = {}
@@ -126,7 +131,8 @@ class FitObserver:
         }
         if self.work is not None:
             w = self.work.round_work(hinfo.n_recomputed, dt_s)
-            attrs.update(dist_evals=w.dist_evals, flops=w.flops,
+            attrs.update(work_unit=w.unit,
+                         dist_evals=w.dist_evals, flops=w.flops,
                          bytes=int(w.hbm_bytes),
                          bound_s=_safe(w.bound_s),
                          bottleneck=w.bottleneck,

@@ -1,0 +1,32 @@
+"""Bound-family end-to-end smoke (scripts/smoke_bounds.py), subprocess-
+isolated because it forces 8 host devices via XLA_FLAGS."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_bounds_smoke_subprocess():
+    """Exponion on every backend: family parity vs bounds="none"
+    (local/mesh/xl/multihost, N % n_shards != 0, degenerate rings),
+    cross-backend bit-parity including the exact-annulus pair counts,
+    mesh kill-and-resume + elastic restore, and the retrace/hostsync/
+    replicated-lint auditors staying green with exponion."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "scripts/smoke_bounds.py"],
+                       env=env, capture_output=True, text=True,
+                       timeout=900, cwd=repo)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for marker in ("family parity[local]", "family parity[mesh(4)]",
+                   "family parity[xl(4,2)]", "family parity[multihost]",
+                   "family parity[xl(1,8) degenerate rings]",
+                   "cross-backend[xl(1,1) == local]",
+                   "cross-backend[mesh == multihost]",
+                   "exponion mesh kill-and-resume: bit-identical",
+                   "replicated-control-flow lint: clean",
+                   "bounds smoke OK"):
+        assert marker in r.stdout, (marker, r.stdout)

@@ -24,7 +24,7 @@ def _fit(X, k, **kw):
 # bounding is exact: tb (either bound type) == gb assignments every round
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("bounds", ["hamerly2", "elkan"])
+@pytest.mark.parametrize("bounds", ["hamerly2", "elkan", "exponion"])
 def test_bounds_never_change_assignments(blobs, bounds):
     X, _ = blobs
     k, b = 8, 512
@@ -42,6 +42,81 @@ def test_bounds_never_change_assignments(blobs, bounds):
         np.testing.assert_allclose(np.asarray(s_ref.stats.C),
                                    np.asarray(s_tb.stats.C),
                                    rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["local", "mesh"])
+def test_bound_families_parity_across_backends(blobs, backend):
+    """Property: every bound family's labels AND centroids are bit-equal
+    to ``bounds="none"`` on the same backend / init / schedule, with an
+    N that is not a multiple of any shard count (pad/tail rows in the
+    sharded path). The mesh leg shards over however many devices exist
+    (1 in plain CI; the multi-device N % n_shards != 0 case runs in
+    scripts/smoke_bounds.py); xl/multihost parity lives there too.
+    """
+    import jax
+
+    from repro import api
+
+    X, _ = blobs
+    X = X[:1003]                      # odd N: never divides shard counts
+    kw = {}
+    if backend == "mesh":
+        kw["mesh"] = jax.make_mesh((jax.device_count(), 1),
+                                   ("data", "model"))
+    base = None
+    for fam in ["none", "hamerly2", "elkan", "exponion"]:
+        cfg = api.FitConfig(k=8, algorithm="tb", b0=256, rho=np.inf,
+                            bounds=fam, max_rounds=25, seed=0,
+                            backend=backend)
+        out = api.fit(X, cfg, **kw)
+        if base is None:
+            base = out
+        else:
+            np.testing.assert_array_equal(out.labels, base.labels,
+                                          err_msg=f"{fam}/{backend}")
+            np.testing.assert_array_equal(out.C, base.C,
+                                          err_msg=f"{fam}/{backend}")
+
+
+def test_exponion_annulus_boundary_tie():
+    """An inter-centroid distance EXACTLY on the annulus boundary
+    (d(c_a, c_j) == R) must not change the assignment or loosen the
+    stored second-nearest bound.
+
+    Geometry (f32-exact integer coordinates): anchor c0=(0,0) with
+    x=(1,0) so u=1; s(0)=d(c0,c1)=3 via c1=(0,3); R = 2u+s = 5 equals
+    d(c0,c2) = d(c0,c3) = 5 exactly for c2=(5,0), c3=(-5,0). The
+    lower bound is manually deflated to force a Hamerly failure, so the
+    point really scans its annulus.
+    """
+    import dataclasses as dc
+
+    from repro.core.state import build_exponion_geom
+
+    C = jnp.asarray([[0.0, 0.0], [0.0, 3.0], [5.0, 0.0], [-5.0, 0.0]])
+    x = jnp.asarray([[1.0, 0.0]])
+    state = init_state(x, 4, bounds="exponion")
+    state = dc.replace(
+        state,
+        stats=dc.replace(state.stats, C=C,
+                         p=jnp.zeros(4, jnp.float32)),
+        points=dc.replace(state.points,
+                          a=jnp.asarray([0], jnp.int32),
+                          d=jnp.asarray([1.0], jnp.float32),
+                          lb=jnp.asarray([0.5], jnp.float32)))
+    geom = build_exponion_geom(C)
+    # both boundary centroids are INSIDE the candidate set (<= count)
+    assert float(geom.s[0]) == 3.0
+    a, d, lb, n_rec, overflow, _ = rounds._assign_exponion(
+        x, state, state.points.a, None, use_shalf=False)
+    assert int(a[0]) == 0                      # assignment unchanged
+    assert float(d[0]) == pytest.approx(1.0)
+    # lb is the EXACT second-nearest (c1 at sqrt(10)), proving the
+    # candidate set contained the true runner-up despite the ties
+    assert float(lb[0]) == pytest.approx(np.sqrt(10.0), rel=1e-6)
+    # all 4 centroids scanned (boundary pair included) + 1 d_a refresh
+    assert int(n_rec) == 5
+    assert not bool(overflow)
 
 
 def test_capacity_compaction_is_exact(blobs):
@@ -160,7 +235,8 @@ def test_all_algorithms_reach_reasonable_quality(blobs, blobs_val):
                      ("mbf", dict(b0=256)),
                      ("gb", dict(b0=256)),
                      ("tb", dict(b0=256, bounds="hamerly2")),
-                     ("tb", dict(b0=256, bounds="elkan"))]:
+                     ("tb", dict(b0=256, bounds="elkan")),
+                     ("tb", dict(b0=256, bounds="exponion"))]:
         res = driver.fit(X, k, algorithm=algo, max_rounds=60, seed=0, **kw)
         mse = float(full_mse(jnp.asarray(blobs_val), jnp.asarray(res.C)))
         assert mse < 2.5 * base, (algo, mse, base)

@@ -51,6 +51,43 @@ def test_local_kill_and_resume_bit_identical(tmp_path, blobs, blobs_val):
     assert km.converged_
 
 
+def test_exponion_kill_and_resume_bit_identical(tmp_path, blobs,
+                                                blobs_val):
+    """Exponion's per-point state is hamerly2's (d, lb) layout and its
+    geometry table is rebuilt per round, never checkpointed — so an
+    interrupted exponion fit resumes bit-identically with the SAME
+    checkpoint machinery (no new state in the manifest)."""
+    X, _ = blobs
+    cfg = api.FitConfig(k=8, b0=512, bounds="exponion", max_rounds=40,
+                        eval_every=5, seed=0)
+    out_a = api.fit(X, cfg, X_val=blobs_val)
+    assert out_a.converged
+
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=3)
+    api.fit(X, dataclasses.replace(cfg, max_rounds=7, checkpoint=ck),
+            X_val=blobs_val)
+    km = api.NestedKMeans(dataclasses.replace(cfg, checkpoint=ck))
+    km.fit(X, X_val=blobs_val, resume=True)
+
+    np.testing.assert_array_equal(out_a.C, km.cluster_centers_)
+    _telemetry_equal_minus_t(out_a.telemetry, km.telemetry_)
+    assert km.converged_
+
+
+def test_exponion_resume_config_must_match(tmp_path, blobs):
+    """A checkpointed hamerly2 fit cannot be resumed as exponion: the
+    bound family rides in the manifest's resolved config."""
+    X, _ = blobs
+    ck = api.CheckpointConfig(checkpoint_dir=str(tmp_path), save_every=2)
+    api.fit(X, api.FitConfig(k=8, b0=512, bounds="hamerly2",
+                             max_rounds=4, seed=0, checkpoint=ck))
+    km = api.NestedKMeans(api.FitConfig(k=8, b0=512, bounds="exponion",
+                                        max_rounds=10, seed=0,
+                                        checkpoint=ck))
+    with pytest.raises(ValueError, match="bounds"):
+        km.fit(X, resume=True)
+
+
 def test_local_resume_restores_mb_stream(tmp_path, blobs):
     """mbf resumes bit-identically: the resampling permutation, stream
     position and host RNG state all ride in the checkpoint."""
@@ -165,7 +202,8 @@ def test_no_duplicate_final_val_record(blobs, blobs_val):
 # n_valid masking (the unit-level face of the mesh tail-row fix)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("bounds", ["none", "hamerly2", "elkan"])
+@pytest.mark.parametrize("bounds", ["none", "hamerly2", "elkan",
+                                    "exponion"])
 def test_nested_round_n_valid_masks_tail(bounds):
     """nested_round(n_valid=m) == nested_round over X[:m]: masked tail
     rows stay unassigned and contribute nothing to the statistics."""
